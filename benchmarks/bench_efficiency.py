@@ -1,0 +1,45 @@
+"""Paper Fig. 7 / Table 4 + §6: simulation cost per time range and the
+headline task acceleration.
+
+Two measurements per (dataset, max_range):
+- simulation cost: NSA wall time (paper Table 4's 'time spent by the
+  simulation process'), for BOTH the paper-faithful per-record loops and
+  this framework's vectorized NSA (the beyond-paper speedup);
+- task acceleration: original_range / max_range (>= 24x at 3600s).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.streamsim import make_stream, nsa, nsa_paper, preprocess
+from repro.streamsim.nsa import compression_factor
+
+TIME_RANGES = (3600, 3000, 2400, 1800, 1200, 600)  # paper Table 4 order
+SCALE = {"sogouq": 1.0, "traffic": 1.0, "userbehavior": 0.25}
+PAPER_LOOP_SCALE = 0.02  # per-record Python loops need a smaller stream
+
+
+def run(csv: List[str]) -> None:
+    for name in ("sogouq", "traffic", "userbehavior"):
+        s = preprocess(make_stream(name, scale=SCALE[name], seed=0))
+        for mr in TIME_RANGES:
+            t0 = time.perf_counter()
+            sim = nsa(s, mr)
+            dt = time.perf_counter() - t0
+            csv.append(
+                f"efficiency/{name}/max{mr},{dt*1e6:.0f},"
+                f"rows={len(sim)};task_speedup={compression_factor(s, mr):.1f}x")
+        # paper-faithful loop vs vectorized, equal inputs (reduced scale)
+        sp = preprocess(make_stream(name, scale=PAPER_LOOP_SCALE, seed=0))
+        t0 = time.perf_counter()
+        nsa_paper(sp, 600)
+        t_loop = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        nsa(sp, 600)
+        t_vec = time.perf_counter() - t0
+        csv.append(
+            f"efficiency/{name}/nsa_paper_loop,{t_loop*1e6:.0f},"
+            f"vectorized_us={t_vec*1e6:.0f};"
+            f"nsa_speedup={t_loop/max(t_vec,1e-9):.1f}x")

@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: Pallas ops (interpret mode on CPU — correctness
+path; TPU is the performance target) vs their jnp oracles, plus the fused
+end-to-end NSA device path vs host numpy.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, *args, reps=5):
+    fn(*args)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv: List[str]) -> None:
+    rng = np.random.default_rng(0)
+
+    # stream_sample: 1M records into 600 buckets
+    n, mr = 1_000_000, 600
+    t = np.sort(rng.uniform(0, 86_400, n))
+    mult = 86_400 / mr
+    dt_k = _t(lambda: ops.stream_sample(t, mr, mult))
+    dt_o = _t(lambda: ops.stream_sample_ref(t, mr, mult))
+    csv.append(f"kernels/stream_sample_1M,{dt_k*1e6:.0f},oracle_us={dt_o*1e6:.0f}")
+
+    # bucket_hist
+    ss = np.sort(rng.integers(0, mr, n)).astype(np.int32)
+    dt_k = _t(lambda: ops.bucket_hist(ss, mr))
+    dt_o = _t(lambda: ref.bucket_hist_ref(jnp.asarray(ss), mr))
+    csv.append(f"kernels/bucket_hist_1M,{dt_k*1e6:.0f},oracle_us={dt_o*1e6:.0f}")
+
+    # volatility moments over a day of per-second counts
+    q = rng.poisson(25.0, 86_400).astype(np.float32)
+    dt_k = _t(lambda: ops.volatility_stats(q))
+    csv.append(f"kernels/volatility_86400,{dt_k*1e6:.0f},")
+
+    # flash decode: 8 x 32 heads x 128 over 4k cache
+    b, h, kh, d, s = 8, 32, 8, 128, 4096
+    key = jax.random.PRNGKey(0)
+    q_ = jax.random.normal(key, (b, h, d), jnp.float32)
+    k_ = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, d))
+    v_ = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, d))
+    lens = jnp.full((b,), s, jnp.int32)
+    dt_k = _t(lambda: ops.flash_decode(q_, k_, v_, lens, block_s=512), reps=2)
+    dt_o = _t(lambda: ref.flash_decode_ref(q_, k_, v_, lens), reps=2)
+    csv.append(f"kernels/flash_decode_8x32x4k,{dt_k*1e6:.0f},"
+               f"oracle_us={dt_o*1e6:.0f}")

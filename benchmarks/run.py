@@ -1,0 +1,25 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_volatility  -> Tables 1-3 (volatility at the six time ranges)
+  bench_network     -> Fig. 6   (bytes into the SPS, trend correlation)
+  bench_efficiency  -> Fig. 7 / Table 4 + the >=24x headline (§6)
+  bench_kernels     -> Pallas kernel micro-benchmarks
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_efficiency, bench_kernels, bench_network, \
+        bench_volatility
+    csv = ["name,us_per_call,derived"]
+    for mod in (bench_volatility, bench_network, bench_efficiency,
+                bench_kernels):
+        print(f"# running {mod.__name__} ...", file=sys.stderr, flush=True)
+        mod.run(csv)
+    print("\n".join(csv))
+
+
+if __name__ == '__main__':
+    main()

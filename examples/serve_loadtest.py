@@ -1,0 +1,28 @@
+"""Serving load test driven by a time-compressed real-world stream.
+
+The paper's headline scenario: a load test that would take a day replays in
+minutes while preserving the arrival process's volatility and trend. Here a
+small LM serves batched requests whose arrivals follow the compressed
+SogouQ query stream (continuous batching, prefill + decode, latency
+percentiles reported).
+
+    PYTHONPATH=src python examples/serve_loadtest.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+sys.argv = [
+    "serve",
+    "--dataset", "sogouq",
+    "--max-range", "60",
+    "--scale", "0.01",
+    "--slots", "8",
+    "--max-len", "48",
+    "--prompt-len", "8",
+    "--new-tokens", "6",
+    "--max-requests-per-bucket", "3",
+    "--out", "results/serve_loadtest_metrics.json",
+]
+serve.main()

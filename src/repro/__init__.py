@@ -1,0 +1,18 @@
+"""repro — production-grade JAX framework reproducing and extending
+"A Framework for Simulating Real-world Stream Data of the Internet of Things"
+(Chu, Du, Yu — Journal of Computers, 2022).
+
+Layers
+------
+- ``repro.streamsim``  : the paper's contribution — IoT stream time-compression
+  (POSD preprocessing, NSA normalize+sample, PSDA producer, controller).
+- ``repro.core``       : public API facade over the pipeline.
+- ``repro.kernels``    : Pallas TPU kernels for the pipeline's compute hot-spots.
+- ``repro.models``     : the 10 assigned transformer/SSM/MoE architectures.
+- ``repro.distributed``: mesh + sharding rules (DP/FSDP/TP/EP/SP).
+- ``repro.training``   : optimizer, train loop, checkpointing, fault tolerance.
+- ``repro.serving``    : KV-cache engine driven by simulated stream load.
+- ``repro.launch``     : production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,100 @@
+"""Assigned architectures × input shapes (40 cells) + the paper's own
+stream-pipeline config.
+
+Each ``<arch>.py`` exposes ``config()`` (the exact published hyperparameters)
+and ``smoke()`` (a reduced same-family config for CPU tests: float32, tiny
+dims, one forward/train step must produce finite outputs).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+step input (weak-type-correct, shardable, no allocation) — the dry-run
+lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer
+
+ARCH_IDS = [
+    "recurrentgemma-2b",
+    "qwen3-32b",
+    "qwen1_5-110b",
+    "llama3-8b",
+    "command-r-plus-104b",
+    "rwkv6-1_6b",
+    "deepseek-v3-671b",
+    "llama4-scout-17b-a16e",
+    "musicgen-medium",
+    "llava-next-34b",
+]
+
+
+def _module(arch: str):
+    name = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+# --------------------------------------------------------------- the shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic decode (SSM/hybrid); decoder-only archs
+    support everything else (DESIGN.md §Arch-applicability)."""
+    if shape == "long_500k":
+        return cfg.supports_long_context()
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of one cell."""
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.input_mode == "embeddings":
+        # modality frontend stub: precomputed frame/patch embeddings
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:
+        inputs = tok
+    if spec.kind == "train":
+        return {"batch": {"inputs": inputs, "labels": tok}}
+    if spec.kind == "prefill":
+        return {"inputs": inputs,
+                "lengths": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s))
+    if cfg.input_mode == "embeddings":
+        tokens = jax.ShapeDtypeStruct((b, cfg.d_model), dt)
+    else:
+        tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"cache": cache, "tokens": tokens}

@@ -1,0 +1,20 @@
+"""rwkv6-1.6b "Finch" — attention-free, data-dependent decay
+[arXiv:2404.05892; unverified]. 24L, d_model 2048, d_ff 7168, vocab 65536."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1_6b", family="ssm",
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=7168, vocab_size=65_536,
+        pattern=("rwkv",), rwkv_head_dim=64,
+        wkv_unroll=16,  # §Perf: 13-23x lower state traffic, same math
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=2, n_kv_heads=2, d_ff=256,
+        vocab_size=512, dtype="float32", loss_chunk=16)

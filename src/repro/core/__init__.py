@@ -1,0 +1,47 @@
+"""repro.core — public API facade for the paper's contribution.
+
+One-call entry point (:func:`simulate_stream`) plus re-exports of the
+pipeline stages so applications compose them directly::
+
+    from repro.core import simulate_stream
+    sim = simulate_stream("userbehavior", max_range=600)
+
+maps to the paper's Fig. 4: POSD -> NSSD -> (PSD -> SPS via
+``repro.streamsim.Producer`` / ``repro.serving`` / ``repro.training``).
+"""
+
+from __future__ import annotations
+
+from repro.streamsim import (  # noqa: F401
+    Controller,
+    Producer,
+    RealClock,
+    SimulationReport,
+    Stream,
+    StreamQueue,
+    StreamStore,
+    VirtualClock,
+    make_stream,
+    nsa,
+    nsa_paper,
+    per_second_counts,
+    preprocess,
+    volatility,
+)
+
+
+def simulate_stream(dataset: str, max_range: int, *, scale: float = 1.0,
+                    seed: int = 0) -> Stream:
+    """POSD + NSA in one call (no persistence). For the persistent,
+    metrics-collecting path use :class:`repro.streamsim.Controller`."""
+    raw = make_stream(dataset, scale=scale, seed=seed)
+    stream = preprocess(raw)
+    return nsa(stream, max_range)
+
+
+__all__ = [
+    "Controller", "Producer", "RealClock", "SimulationReport", "Stream",
+    "StreamQueue", "StreamStore", "VirtualClock", "make_stream", "nsa",
+    "nsa_paper", "per_second_counts", "preprocess", "simulate_stream",
+    "volatility",
+]

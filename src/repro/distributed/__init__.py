@@ -1,0 +1,11 @@
+"""Distribution: mesh construction, logical-axis sharding rules, and the
+constraint API the model code calls (no-op outside an active mesh context).
+"""
+
+from repro.distributed.api import constrain, sharding_rules  # noqa: F401
+from repro.distributed.sharding import (  # noqa: F401
+    RULESETS,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+)

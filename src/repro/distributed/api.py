@@ -1,0 +1,51 @@
+"""Logical-axis sharding constraints (the MaxText-style indirection, flaxless).
+
+Model code annotates activations with *logical* axis names::
+
+    x = constrain(x, "batch", "seq", "embed")
+
+Outside a mesh context this is the identity, so models stay runnable on a
+laptop. Inside :func:`sharding_rules` the names map to mesh axes and the
+call becomes ``jax.lax.with_sharding_constraint`` — which is how the §Perf
+loop re-shards activations without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: Dict[str, Optional[object]]):
+    """Activate logical->mesh axis rules, e.g.
+    {'batch': ('pod', 'data'), 'embed': None, 'heads': 'model'}."""
+    token = _RULES.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def active_rules() -> Optional[Tuple[Mesh, Dict]]:
+    return _RULES.get()
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Annotate array x (rank == len(logical_axes)) with the active rules."""
+    ctx = _RULES.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical_axes):
+        return x  # shape changed under vmap/scan; skip rather than mis-pin
+    spec = P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

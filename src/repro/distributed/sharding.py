@@ -1,0 +1,223 @@
+"""Sharding rules: params / batch / cache PartitionSpec trees per policy.
+
+Mesh axes: ``pod`` (cross-pod DP), ``data`` (DP + FSDP), ``model`` (TP + EP).
+
+Policies
+--------
+- ``tp``      : tensor-parallel params over 'model'; replicated over data
+                (small models — no per-layer FSDP gathers).
+- ``fsdp_tp`` : 'tp' + parameters and optimizer state additionally sharded
+                over 'data' (ZeRO-3); XLA inserts per-layer all-gather /
+                reduce-scatter inside the layer scan, which overlaps with
+                compute. Required for >=100B models to fit HBM.
+
+Rules are *name-based*: each param leaf resolves by its dict key and rank.
+Leaves under ``runs`` carry a leading stacked-layer axis (never sharded).
+Axes that don't divide the mesh axis size (e.g. kv_heads=8 on model=16)
+fall back to replication — the standard GQA-TP compromise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+DP_AXES = ("pod", "data")  # batch shards over both
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _dp(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.axis_names) or None
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return axis is not None and dim % _axis_size(mesh, axis) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axis):
+    return axis if _fits(dim, mesh, axis) else None
+
+
+# --------------------------------------------------------------- rule table
+def _param_spec(cfg: ModelConfig, mesh: Mesh, policy: str, name: str,
+                shape: tuple) -> P:
+    """Spec for an *unstacked* param leaf by name/rank."""
+    fsdp = "data" if policy == "fsdp_tp" and "data" in mesh.axis_names else None
+    m = "model"
+
+    def f(dim):  # fsdp only if divisible
+        return _maybe(dim, mesh, fsdp)
+
+    def t(dim):  # tensor axis only if divisible
+        return _maybe(dim, mesh, m)
+
+    r = len(shape)
+    if name == "embed":
+        # vocab-parallel table; d stays unsharded — sharding d over 'data'
+        # puts the FSDP axis on the lookup's gather dim and the unembed's
+        # contraction, inducing (B,S,V)-sized all-reduces (measured in
+        # EXPERIMENTS.md §Perf llama3 iteration 3)
+        return P(t(shape[0]), None)
+    if name == "lm_head":
+        # vocab-sharded head: logits shard over 'model'; softmax reductions
+        # cross shards as tiny (B,C) collectives instead of logits-sized
+        return P(None, t(shape[1]))
+    if name in ("wq",):
+        return P(f(shape[0]), t(shape[1]), None)
+    if name in ("wk", "wv"):
+        return P(f(shape[0]), t(shape[1]), None)
+    if name == "wo" and r == 3:
+        return P(t(shape[0]), None, f(shape[2]))
+    if name in ("gate", "up") and r == 2:       # swiglu
+        return P(f(shape[0]), t(shape[1]))
+    if name == "down" and r == 2:
+        return P(t(shape[0]), f(shape[1]))
+    if name in ("gate", "up") and r == 3:       # experts (E, d, f)
+        return P(t(shape[0]), f(shape[1]), None)
+    if name == "down" and r == 3:               # experts (E, f, d)
+        return P(t(shape[0]), None, f(shape[2]))
+    if name == "router":
+        return P(None, None)
+    # --- MLA ---
+    if name == "w_dq":
+        return P(f(shape[0]), None)
+    if name == "w_uq":
+        return P(None, t(shape[1]), None)
+    if name == "w_dkv":
+        return P(f(shape[0]), None)
+    if name == "w_ukv":
+        return P(None, t(shape[1]), None)
+    # --- RG-LRU ---
+    if name in ("in_gelu", "in_rnn"):
+        return P(f(shape[0]), t(shape[1]))
+    if name == "out":
+        return P(t(shape[0]), f(shape[1]))
+    if name == "conv_w":
+        return P(None, t(shape[1]))
+    if name in ("conv_b", "lambda"):
+        return P(t(shape[0]))
+    if name in ("gate_a", "gate_x"):
+        return P(None, None, None)
+    # --- RWKV ---
+    if name in ("wr", "wk_r", "wv_r", "wg", "cm_r"):
+        return P(f(shape[0]), t(shape[1]))
+    if name == "cm_k":
+        return P(f(shape[0]), t(shape[1]))
+    if name == "cm_v":
+        return P(t(shape[0]), f(shape[1]))
+    if name == "w_lora_a":
+        return P(f(shape[0]), None)
+    if name == "w_lora_b":
+        return P(None, f(shape[1]))
+    if name == "proj":  # mtp
+        return P(f(shape[0]), None)
+    if r == 2 and name in ("wo",):              # rwkv wo (d, d)
+        return P(t(shape[0]), f(shape[1]))
+    # norms, biases, mus, u, small tables -> replicated
+    return P(*([None] * r))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                 policy: str = "fsdp_tp") -> Any:
+    """PartitionSpec tree matching a params (shape) pytree."""
+
+    def walk(path, leaf):
+        keys = [getattr(p_, "key", getattr(p_, "idx", None))
+                for p_ in path]
+        name = keys[-1]
+        stacked = "runs" in keys
+        shape = tuple(leaf.shape)
+        # rwkv wk/wv collide with attention names but are rank-2
+        if name in ("wk", "wv") and len(shape) - int(stacked) == 2:
+            name = name + "_r"
+        core = shape[1:] if stacked else shape
+        spec = _param_spec(cfg, mesh, policy, name, core)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+# ----------------------------------------------------------------- batches
+def batch_pspec(mesh: Mesh) -> Dict[str, P]:
+    dp = _dp(mesh)
+    return {
+        "tokens": P(dp, None),
+        "embeds": P(dp, None, None),
+        "labels": P(dp, None),
+        "mask": P(dp, None),
+    }
+
+
+# ------------------------------------------------------------------- cache
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any,
+                 *, shard_seq: bool = True) -> Any:
+    """Decode-cache specs: batch over DP; the long seq axis over 'model'
+    (distributed flash-decode); recurrent state heads over 'model'."""
+    dp_all = _dp(mesh)
+    m = "model"
+
+    def walk(path, leaf):
+        name = getattr(path[-1], "key", None)
+        shape = tuple(leaf.shape)
+        # batch axis shards over DP only when divisible (long_500k has B=1)
+        bdim = shape[0] if name == "pos" else (shape[1] if len(shape) > 1
+                                               else 1)
+        dp = dp_all if (dp_all and bdim % _axis_size(mesh, dp_all) == 0) \
+            else None
+        if name in ("k", "v"):      # (R, B, S, Kh, Dh)
+            seq = _maybe(shape[2], mesh, m) if shard_seq else None
+            return P(None, dp, seq, None, None)
+        if name in ("ckv", "kr"):   # (R, B, S, X)
+            seq = _maybe(shape[2], mesh, m) if shard_seq else None
+            return P(None, dp, seq, None)
+        if name == "h":             # rglru (R, B, W)
+            return P(None, dp, _maybe(shape[2], mesh, m))
+        if name == "conv":          # (R, B, K-1, W)
+            return P(None, dp, None, _maybe(shape[3], mesh, m))
+        if name == "s":             # rwkv (R, B, nh, hd, hd)
+            return P(None, dp, _maybe(shape[2], mesh, m), None, None)
+        if name in ("tm_prev", "cm_prev"):
+            return P(None, dp, None)
+        if name == "pos":
+            return P(dp)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_shape)
+
+
+# ------------------------------------------------------- activation rules
+def activation_rules(mesh: Mesh, *, shard_seq: bool = False) -> Dict:
+    """Logical-axis rules for repro.distributed.api.constrain."""
+    dp = _dp(mesh)
+    return {
+        "batch": dp,
+        "seq": "model" if shard_seq else None,
+        "embed": None,
+        "heads": "model",
+        "kv": None,
+        "ff": "model",
+        "expert": "model",
+        "cap": None,
+        "vocab": "model",
+        "kvseq": "model",
+    }
+
+
+RULESETS = {
+    "tp": dict(policy="tp"),
+    "fsdp_tp": dict(policy="fsdp_tp"),
+}

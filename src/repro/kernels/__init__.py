@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Paper hot-spots (bandwidth-bound scans over millions of records):
+- :mod:`repro.kernels.stream_sample` — fused NSA inner loop: Min-Max
+  normalize -> scale-stamp -> systematic keep mask (one HBM pass).
+- :mod:`repro.kernels.bucket_hist`   — per-scale-stamp histogram via the
+  TPU one-hot-matmul idiom (MXU-resident counting).
+- :mod:`repro.kernels.volatility`    — fused count moments (sum, sum-sq)
+  for the Tables 1-3 statistics in one pass.
+
+Serving hot-spot under the paper's load-testing scenario:
+- :mod:`repro.kernels.flash_decode`  — blocked online-softmax GQA decode
+  attention (one new token vs. a long KV cache).
+
+Each kernel ships a pure-jnp oracle in :mod:`repro.kernels.ref` and a jit'd
+public wrapper in :mod:`repro.kernels.ops` that selects ``interpret=True``
+automatically off-TPU (this container is CPU-only; TPU is the target).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

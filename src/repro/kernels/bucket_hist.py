@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: scale-stamp histogram via the one-hot-matmul idiom.
+
+TPUs have no fast scatter-add; the native way to histogram is to turn each
+tile of bucket ids into a one-hot matrix and let the MXU sum it:
+
+    partial[b] = sum_i onehot(ss_i)[b]   ==   ones(1, T) @ onehot(T, B)
+
+The grid walks record tiles sequentially (TPU grid order), accumulating the
+per-tile partial histogram into the single output block — the standard
+Pallas reduction pattern (initialize at step 0, accumulate after).
+
+Bucket axis is padded to a LANE multiple by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE
+
+
+def _kernel(ss_ref, hist_ref, *, buckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    ss = ss_ref[...].reshape(TILE)                       # (TILE,) int32
+    onehot = (ss[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (TILE, buckets), 1)).astype(jnp.float32)
+    partial = jnp.sum(onehot, axis=0, dtype=jnp.float32)  # MXU-sum per tile
+    hist_ref[...] += partial.reshape(1, buckets)
+
+
+@functools.partial(jax.jit, static_argnames=("buckets", "interpret"))
+def bucket_hist_pallas(ss: jnp.ndarray, buckets: int, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """ss: (n,) int32 scale stamps, n % TILE == 0, padded entries must carry
+    bucket id >= buckets (the wrapper pads with ``buckets`` and the one-hot
+    simply never matches). Returns (buckets,) int32 counts."""
+    n = ss.shape[0]
+    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert buckets % LANE == 0, f"pad buckets to a multiple of {LANE}"
+    rows = n // LANE
+    ss2 = ss.reshape(rows, LANE)
+    grid = (rows // SUBLANE,)
+    hist = pl.pallas_call(
+        functools.partial(_kernel, buckets=buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, buckets), jnp.float32),
+        interpret=interpret,
+    )(ss2)
+    return hist.reshape(buckets).astype(jnp.int32)

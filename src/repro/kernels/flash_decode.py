@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: blocked online-softmax GQA decode attention.
+
+The serving hot-spot under the paper's load-testing scenario: one new token
+per sequence attends to a long KV cache. The op is purely memory-bound
+(arithmetic intensity ~2 flops/byte), so the kernel's job is to stream K/V
+through VMEM exactly once at full HBM bandwidth with no (B, S)-sized
+intermediates — the online-softmax recurrence keeps only (H,)-sized running
+max/denominator and an (H, D) accumulator in VMEM scratch across the
+sequential seq-block grid axis.
+
+GQA layout: H = Kh * G query heads share Kh KV heads; scores are computed as
+a Kh-batched (G, D) x (D, Sb) matmul so the MXU sees dense tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, kh: int, g: int):
+    b, j = pl.program_id(0), pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32).reshape(kh, g, d)     # (Kh, G, D)
+    k = k_ref[0].astype(jnp.float32)                       # (Sb, Kh, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    # (Kh, G, Sb) batched matmul over the shared-KV head groups
+    scores = jax.lax.dot_general(
+        q, jnp.swapaxes(k, 0, 1),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+    ) / jnp.sqrt(jnp.float32(d))
+
+    # mask cache positions beyond the valid length
+    length = len_ref[0, 0]
+    pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+    scores = jnp.where(pos < length, scores, NEG_INF)
+
+    m_prev = m_ref[...].reshape(kh, g)                     # (Kh, G)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)                         # (Kh, G)
+    p = jnp.exp(scores - m_new[..., None])                 # (Kh, G, Sb)
+
+    l_prev = l_ref[...].reshape(kh, g)
+    l_new = l_prev * corr + p.sum(axis=-1)
+
+    # (Kh, G, D) contribution via Kh-batched (G, Sb) x (Sb, D)
+    pv = jax.lax.dot_general(
+        p, jnp.swapaxes(v, 0, 1),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+    )
+    acc_prev = acc_ref[...].reshape(kh, g, d)
+    acc_new = acc_prev * corr[..., None] + pv
+
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+    acc_ref[...] = acc_new.reshape(acc_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...].reshape(kh, g), 1e-30)
+        out = acc_ref[...].reshape(kh, g, d) / denom[..., None]
+        o_ref[...] = out.reshape(1, kh * g, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        lengths: jnp.ndarray, *, block_s: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,) int32.
+    S must be a multiple of ``block_s``. Returns (B, H, D) in q's dtype."""
+    b_sz, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0, "query heads must be a multiple of KV heads"
+    assert s % block_s == 0, f"cache length {s} % block_s {block_s} != 0"
+    g = h // kh
+    grid = (b_sz, s // block_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, kh=kh, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, j: (b, 0, 0)),          # q
+            pl.BlockSpec((1, block_s, kh, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_s, kh, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),                # length
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_sz, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, h), jnp.float32),       # running max
+            pltpu.VMEM((1, h), jnp.float32),       # running denominator
+            pltpu.VMEM((h, d), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths.reshape(b_sz, 1).astype(jnp.int32))

@@ -1,0 +1,140 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Each op handles padding/layout, dispatches to the Pallas kernel (TPU) or its
+``interpret=True`` execution (CPU — this container), and exposes exactly the
+semantics the pure-jnp oracles in :mod:`repro.kernels.ref` define. Tests
+sweep shapes/dtypes asserting allclose against the oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bucket_hist import LANE, TILE, bucket_hist_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.stream_sample import stream_sample_pallas
+from repro.kernels.volatility import volatility_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, value) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), value, x.dtype)])
+    return x, n
+
+
+# --------------------------------------------------------------------- NSA
+def stream_sample(t: jnp.ndarray, max_range: int,
+                  multiple: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused NSA inner loop on device.
+
+    t must be sorted ascending. Returns (scale_stamp int32, keep bool), both
+    length n. Mirrors repro.streamsim.nsa semantics exactly (keep =
+    'systematic', multiple precomputed by the caller).
+
+    Epoch-second timestamps (~1.5e9) quantize to ~128 s in float32, so the
+    wrapper re-bases to relative time in float64 *before* the cast — the
+    kernel then works at ~10 ms resolution over a day-long stream. Records
+    within float32-eps of a bucket edge may still bucket differently from the
+    float64 host path (≪0.1%); the oracle uses the identical f32 path so
+    kernel-vs-oracle is exact.
+    """
+    t = np.asarray(t, np.float64)
+    t = jnp.asarray(t - t[0] if len(t) else t, jnp.float32)
+    n = t.shape[0]
+    if n == 0:
+        return jnp.zeros(0, jnp.int32), jnp.zeros(0, bool)
+    t_min = t[0]
+    span = jnp.maximum(t[-1] - t[0], 1e-9)
+    # per-bucket tables: O(max_range) via searchsorted on the sorted column
+    edges = t_min + span * jnp.arange(max_range + 1, dtype=jnp.float32) / max_range
+    starts_full = jnp.searchsorted(t, edges[:-1], side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(t, edges[1:], side="left").astype(jnp.int32)
+    counts = (ends - starts_full).astype(jnp.int32)
+    # the clamp (record at t_max) folds into the last bucket
+    counts = counts.at[-1].add(n - ends[-1])
+    tp, n0 = _pad_to(t, TILE, jnp.inf)
+    ss, keep = stream_sample_pallas(
+        tp, starts_full, counts, t_min, span,
+        jnp.float32(multiple), max_range,
+        interpret=not _on_tpu())
+    return ss[:n0], keep[:n0].astype(bool)
+
+
+def stream_sample_ref(t: jnp.ndarray, max_range: int, multiple: float):
+    """Oracle with the same padding-free public signature."""
+    t = np.asarray(t, np.float64)
+    t = jnp.asarray(t - t[0] if len(t) else t, jnp.float32)
+    n = t.shape[0]
+    t_min = t[0]
+    span = jnp.maximum(t[-1] - t[0], 1e-9)
+    edges = t_min + span * jnp.arange(max_range + 1, dtype=jnp.float32) / max_range
+    starts_full = jnp.searchsorted(t, edges[:-1], side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(t, edges[1:], side="left").astype(jnp.int32)
+    counts = (ends - starts_full).astype(jnp.int32)
+    counts = counts.at[-1].add(n - ends[-1])
+    ss, keep = ref.stream_sample_ref(t, starts_full, counts, t_min, span,
+                                     jnp.float32(multiple), max_range)
+    return ss, keep.astype(bool)
+
+
+# --------------------------------------------------------------- histogram
+def bucket_hist(ss: jnp.ndarray, max_range: int) -> jnp.ndarray:
+    """Per-bucket counts of scale stamps; returns (max_range,) int32."""
+    ss = jnp.asarray(ss, jnp.int32)
+    buckets = int(-(-max_range // LANE) * LANE)  # pad bucket axis to LANE
+    ssp, _ = _pad_to(ss, TILE, buckets)          # pad ids out of range
+    hist = bucket_hist_pallas(ssp, buckets, interpret=not _on_tpu())
+    return hist[:max_range]
+
+
+# -------------------------------------------------------------- volatility
+def volatility_moments(q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (Σq, Σq²) over the per-second count series."""
+    q = jnp.asarray(q, jnp.float32)
+    qp, n = _pad_to(q, TILE, 0.0)
+    out = volatility_pallas(qp, interpret=not _on_tpu())
+    return out[0], out[1]
+
+
+def volatility_stats(q: jnp.ndarray) -> Tuple[float, float, float]:
+    """(average, variance, std) — device-fused version of formulas (2)-(4)."""
+    n = q.shape[0]
+    s, s2 = volatility_moments(q)
+    avg = s / n
+    var = jnp.maximum(s2 / n - avg * avg, 0.0)
+    return avg, var, jnp.sqrt(var)
+
+
+# ------------------------------------------------------------ flash decode
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray, *, block_s: int = 512) -> jnp.ndarray:
+    """Blocked online-softmax GQA decode attention (see kernel docstring).
+
+    Pads the cache axis to a block multiple; padded positions are masked by
+    ``lengths`` automatically.
+    """
+    s = k.shape[1]
+    pad = (-s) % block_s
+    if pad:
+        zk = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
+                               interpret=not _on_tpu())
+
+
+__all__ = [
+    "bucket_hist", "flash_decode", "stream_sample", "stream_sample_ref",
+    "volatility_moments", "volatility_stats",
+]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def scale_stamp_ref(t: jnp.ndarray, t_min: jnp.ndarray, span: jnp.ndarray,
+                    max_range: int) -> jnp.ndarray:
+    """Min-Max normalize timestamps to integer buckets (paper formula (1))."""
+    ss = jnp.floor((t - t_min) / span * max_range).astype(jnp.int32)
+    return jnp.clip(ss, 0, max_range - 1)
+
+
+def stream_sample_ref(t: jnp.ndarray, starts: jnp.ndarray,
+                      counts: jnp.ndarray, t_min: jnp.ndarray,
+                      span: jnp.ndarray, multiple: jnp.ndarray,
+                      max_range: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused NSA inner loop: (scale_stamp, systematic keep mask).
+
+    ``starts``/``counts`` are the per-bucket offsets/sizes of the (sorted)
+    timestamp array. Keep rule (Bresenham-even, k of c records survive):
+        k = clip(round(c / multiple), 1)
+        keep(rank) = (rank * k) mod c < k
+    """
+    n = t.shape[0]
+    ss = scale_stamp_ref(t, t_min, span, max_range)
+    start = starts[ss]
+    c = counts[ss]
+    rank = jnp.arange(n, dtype=jnp.int32) - start
+    k = jnp.clip(jnp.rint(c.astype(jnp.float32) / multiple), 1, None)
+    k = k.astype(jnp.int32)
+    keep = (rank * k) % jnp.maximum(c, 1) < k
+    return ss, keep.astype(jnp.int32)
+
+
+def bucket_hist_ref(ss: jnp.ndarray, max_range: int) -> jnp.ndarray:
+    """Histogram of scale stamps: counts[b] = |{i : ss_i == b}|."""
+    return jnp.zeros(max_range, jnp.int32).at[ss].add(1)
+
+
+def volatility_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """Fused first two moments of the per-second count series.
+
+    Returns [sum, sum_sq] (float32); avg/var/std derive on the host side.
+    """
+    qf = q.astype(jnp.float32)
+    return jnp.stack([qf.sum(), (qf * qf).sum()])
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray) -> jnp.ndarray:
+    """GQA decode attention oracle.
+
+    q: (B, H, D) one query per sequence (the new token)
+    k: (B, S, Kh, D), v: (B, S, Kh, D) KV cache, H = Kh * G
+    lengths: (B,) valid cache lengths; positions >= length are masked.
+    Returns (B, H, D) in q's dtype; accumulation in f32.
+    """
+    B, H, D = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.reshape(B, Kh, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(D).astype(jnp.float32)
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, H, D).astype(q.dtype)

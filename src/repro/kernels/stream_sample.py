@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused NSA inner loop (normalize -> bucket -> keep mask).
+
+One HBM pass over the timestamp column produces both the scale stamp and the
+systematic-sampling keep mask. The per-bucket offset/size tables (starts,
+counts; ``max_range`` <= 3600 entries, <= 14 KiB each) ride along in VMEM for
+every tile, so the in-bucket rank needs no second pass and no host round-trip
+— this is the kernel-level fusion of Algorithm 1's two loops.
+
+Layout: the wrapper pads the record axis to a multiple of the tile and
+reshapes to (rows, 128) so the lane dimension is hardware-native; each grid
+step processes an (8, 128)-record tile from VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE  # records per grid step
+
+
+def _kernel(t_ref, starts_ref, counts_ref, scalar_ref, ss_ref, keep_ref,
+            *, max_range: int):
+    i = pl.program_id(0)
+    t = t_ref[...].astype(jnp.float32)          # (SUBLANE, LANE)
+    t_min = scalar_ref[0]
+    inv_span = scalar_ref[1]                     # 1/span, precomputed
+    multiple = scalar_ref[2]
+
+    # --- normalize: paper formula (1), floored to the simulated second ---
+    ss = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
+    ss = jnp.clip(ss, 0, max_range - 1)
+
+    # --- in-bucket rank via VMEM table gather ---
+    starts = starts_ref[...]                     # (max_range,) int32
+    counts = counts_ref[...]
+    start = jnp.take(starts, ss, axis=0)
+    c = jnp.take(counts, ss, axis=0)
+
+    base = i * TILE
+    row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 1)
+    gidx = base + row * LANE + col               # global record index
+    rank = gidx - start
+
+    # --- systematic keep: k of c survive, Bresenham-even ---
+    k = jnp.clip(jnp.rint(c.astype(jnp.float32) / multiple), 1, None)
+    k = k.astype(jnp.int32)
+    keep = (rank * k) % jnp.maximum(c, 1) < k
+
+    ss_ref[...] = ss
+    keep_ref[...] = keep.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_range", "interpret"))
+def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
+                         counts: jnp.ndarray, t_min: jnp.ndarray,
+                         span: jnp.ndarray, multiple: jnp.ndarray,
+                         max_range: int, *, interpret: bool = False):
+    """t: (n,) float32 sorted timestamps (pre-padded to TILE multiple with
+    +inf -> clipped to last bucket, mask discarded by wrapper).
+    Returns (scale_stamp int32 (n,), keep int32 (n,))."""
+    n = t.shape[0]
+    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    rows = n // LANE
+    t2 = t.reshape(rows, LANE)
+    scalars = jnp.stack([
+        t_min.astype(jnp.float32),
+        (1.0 / span).astype(jnp.float32),
+        multiple.astype(jnp.float32),
+    ])
+    grid = (rows // SUBLANE,)
+    ss, keep = pl.pallas_call(
+        functools.partial(_kernel, max_range=max_range),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),   # timestamps
+            pl.BlockSpec((max_range,), lambda i: (0,)),        # starts (whole)
+            pl.BlockSpec((max_range,), lambda i: (0,)),        # counts (whole)
+            pl.BlockSpec((3,), lambda i: (0,)),                # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+        ],
+        interpret=interpret,
+    )(t2, starts, counts, scalars)
+    return ss.reshape(n), keep.reshape(n)

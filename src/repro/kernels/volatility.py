@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused count moments for the volatility statistics.
+
+Tables 1-3 need Average / Variance / StdVariance of the per-second count
+series q. Three separate reductions would read q from HBM three times; this
+kernel computes [Σq, Σq²] in a single pass (one tile in VMEM at a time,
+sequential-grid accumulation), and the wrapper derives
+avg = Σq/n, var = Σq²/n − avg², std = √var.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE
+
+
+def _kernel(q_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    s = jnp.sum(q)
+    s2 = jnp.sum(q * q)
+    out_ref[0, 0] += s
+    out_ref[0, 1] += s2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def volatility_pallas(q: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """q: (n,) counts, n % TILE == 0 (zero-padded — zeros do not perturb the
+    sums; the wrapper divides by the true length). Returns [Σq, Σq²] f32."""
+    n = q.shape[0]
+    assert n % TILE == 0, f"pad counts to a multiple of {TILE}"
+    rows = n // LANE
+    q2 = q.reshape(rows, LANE)
+    grid = (rows // SUBLANE,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(q2)
+    return out.reshape(2)

@@ -1,0 +1,10 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX modules.
+
+Everything is functional: ``init_params(cfg, key) -> pytree`` and
+``apply``-style functions taking the pytree explicitly. No flax/optax —
+params are plain nested dicts, distribution is applied from the outside via
+PartitionSpec trees (:mod:`repro.distributed.sharding`).
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,318 @@
+"""Attention mixers: GQA (global & sliding-window), chunked-causal
+(flash-style, memory-bounded), MLA (DeepSeek), and their decode paths.
+
+Memory discipline (this is what makes prefill_32k lowerable):
+- ``attn_impl='naive'``   materializes (B, H, Sq, Skv) scores — fine for
+  short sequences and smoke tests.
+- ``attn_impl='chunked'`` processes query chunks against only their causal
+  KV prefix (static Python triangle over chunks, online-softmax inner scan),
+  so peak live memory is (B, H, cq, ckv) and FLOPs are the exact causal
+  triangle — no masked-half waste.
+
+Decode reads the KV cache with plain jnp ops so XLA SPMD can distribute the
+softmax over a sequence-sharded cache (the distributed flash-decode
+pattern); the Pallas kernel (repro.kernels.flash_decode) is the
+single-device fast path used by the serving engine.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, matmul, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ================================================================== params
+def attn_init(cfg: ModelConfig, key) -> Dict:
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dt).reshape(d, h, dh),
+        "wk": dense_init(ks[1], d, kh * dh, dt).reshape(d, kh, dh),
+        "wv": dense_init(ks[2], d, kh * dh, dt).reshape(d, kh, dh),
+        "wo": dense_init(ks[3], h * dh, d, dt).reshape(h, dh, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dt)
+        p["bk"] = jnp.zeros((kh, dh), dt)
+        p["bv"] = jnp.zeros((kh, dh), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def mla_init(cfg: ModelConfig, key) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], d, cfg.q_lora_rank, dt),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, h * qh, dt
+                           ).reshape(cfg.q_lora_rank, h, qh),
+        "w_dkv": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), jnp.float32),
+        "w_ukv": dense_init(
+            ks[3], cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim), dt
+        ).reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim),
+        "wo": dense_init(ks[4], h * cfg.v_head_dim, d, dt
+                         ).reshape(h, cfg.v_head_dim, d),
+    }
+
+
+# ============================================================ QKV plumbing
+def _qkv(cfg: ModelConfig, p: Dict, x: jnp.ndarray, positions: jnp.ndarray):
+    """x: (B, S, d) -> q (B,S,H,Dh), k/v (B,S,Kh,Dh), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(x.dtype)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    b, s, kh, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, groups, dh)
+                            ).reshape(b, s, kh * groups, dh)
+
+
+# ========================================================== full-seq paths
+def _naive_attention(q, k, v, positions, window: int) -> jnp.ndarray:
+    """(B,S,H,D) x (B,S,H,D) -> (B,S,H,D); causal (+optional window)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    pq = positions[:, :, None]   # (B,Sq,1)
+    pk = positions[:, None, :]   # (B,1,Sk)
+    mask = pq >= pk
+    if window > 0:
+        mask &= (pq - pk) < window
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, positions, window: int,
+                       cq: int, ckv: int) -> jnp.ndarray:
+    """Flash-style causal attention, exact-triangle FLOPs.
+
+    Static Python loop over query chunks; each chunk scans only the KV chunks
+    its causal (and window) footprint reaches, carrying online-softmax
+    (m, l, acc). Peak live scores: (B, H, cq, ckv) f32.
+    """
+    b, s, h, dh = q.shape
+    dv = v.shape[-1]       # may differ from dh (MLA: qk 192, v 128)
+    scale = 1.0 / math.sqrt(dh)
+    cq = min(cq, s)
+    ckv = min(ckv, s)
+    assert s % cq == 0 and s % ckv == 0, (s, cq, ckv)
+    outs = []
+    for i in range(s // cq):
+        q_i = q[:, i * cq:(i + 1) * cq]                       # (B,cq,H,D)
+        pq = positions[:, i * cq:(i + 1) * cq]                # (B,cq)
+        hi = (i + 1) * cq                                     # causal bound
+        lo = max(0, (i * cq - window) // ckv * ckv) if window > 0 else 0
+        n_kv = -(-(hi - lo) // ckv)                           # chunks to scan
+        k_sl = jax.lax.dynamic_slice_in_dim(k, lo, n_kv * ckv, axis=1)
+        v_sl = jax.lax.dynamic_slice_in_dim(v, lo, n_kv * ckv, axis=1)
+        p_sl = jax.lax.dynamic_slice_in_dim(positions, lo, n_kv * ckv, axis=1)
+        k_ch = k_sl.reshape(b, n_kv, ckv, h, dh).swapaxes(0, 1)
+        v_ch = v_sl.reshape(b, n_kv, ckv, h, dv).swapaxes(0, 1)
+        p_ch = p_sl.reshape(b, n_kv, ckv).swapaxes(0, 1)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, p_j = inp
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j,
+                            preferred_element_type=jnp.float32) * scale
+            msk = pq[:, :, None] >= p_j[:, None, :]
+            if window > 0:
+                msk &= (pq[:, :, None] - p_j[:, None, :]) < window
+            sc = jnp.where(msk[:, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p_ = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p_.astype(q.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_ch, v_ch, p_ch))
+        out_i = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        outs.append(out_i.swapaxes(1, 2))                     # (B,cq,H,D)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                    positions: jnp.ndarray, *, window: int = 0) -> jnp.ndarray:
+    """Full-sequence GQA attention (train / prefill)."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+    s = x.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "naive" if s <= max(cfg.attn_chunk_q, 512) else "chunked"
+    if impl == "naive":
+        out = _naive_attention(q, k, v, positions, window)
+    else:
+        out = _chunked_attention(q, k, v, positions, window,
+                                 cfg.attn_chunk_q, cfg.attn_chunk_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+
+
+# ============================================================== decode path
+def attn_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                pos: jnp.ndarray, *, window: int = 0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (B, 1, d); cache_{k,v}: (B, S, Kh, Dh) (ring
+    buffer of size `window` when window > 0); pos: (B,) absolute position of
+    the new token. Returns (y (B,1,d), new_k, new_v)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
+    slot = pos % s_cache if window > 0 else pos
+    cache_k = _scatter_cache(cache_k, k_new, slot)
+    cache_v = _scatter_cache(cache_v, v_new, slot)
+
+    groups = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    qg = q.reshape(b, cfg.n_kv_heads, groups, cfg.head_dim_)
+    # scores over the whole cache; SPMD distributes when cache is seq-sharded
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    cache_pos = _cache_positions(pos, s_cache, window)          # (B, S)
+    valid = cache_pos <= pos[:, None]
+    if window > 0:
+        valid &= (pos[:, None] - cache_pos) < window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(x.dtype), cache_v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+    return y, cache_k, cache_v
+
+
+def _scatter_cache(cache: jnp.ndarray, new: jnp.ndarray,
+                   slot: jnp.ndarray) -> jnp.ndarray:
+    """cache (B,S,Kh,D), new (B,1,Kh,D), slot (B,) -> per-batch dynamic set."""
+    b = cache.shape[0]
+    oh = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)  # (B,S)
+    return cache * (1 - oh[:, :, None, None]) + new * oh[:, :, None, None]
+
+
+def _cache_positions(pos: jnp.ndarray, s_cache: int, window: int):
+    """Absolute position stored at each cache slot (ring-aware)."""
+    idx = jnp.arange(s_cache)[None, :]
+    if window <= 0:
+        return jnp.broadcast_to(idx, (pos.shape[0], s_cache))
+    # ring buffer: slot holds the latest absolute position p with
+    # p % s_cache == idx and p <= pos
+    cur = pos[:, None]
+    cand = cur - ((cur - idx) % s_cache)
+    return cand
+
+
+# ==================================================================== MLA
+def mla_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+              positions: jnp.ndarray) -> jnp.ndarray:
+    """DeepSeek MLA, full-sequence (train / prefill): reconstruct per-head
+    K/V from the latent, then chunked/naive attention with qk dim
+    (nope+rope) and v dim v_head_dim."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(matmul(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"]).astype(x.dtype)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = matmul(x, p["w_dkv"])
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_ukv"]).astype(x.dtype)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "naive" if s <= max(cfg.attn_chunk_q, 512) else "chunked"
+    if impl == "naive":
+        out = _naive_attention(qq, k, v, positions, 0)
+    else:
+        out = _chunked_attention(qq, k, v, positions, 0,
+                                 cfg.attn_chunk_q, cfg.attn_chunk_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+
+
+def mla_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+               cache_ckv: jnp.ndarray, cache_kr: jnp.ndarray,
+               pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Absorbed-matrix MLA decode: attention runs directly in the
+    kv_lora_rank latent space — the cache stores (c_kv, k_rope) only
+    (576 dims/token instead of H*(nope+v)=32k), which is MLA's point.
+
+    x: (B,1,d); cache_ckv: (B,S,R); cache_kr: (B,S,rope); pos: (B,)."""
+    b = x.shape[0]
+    h, r = cfg.n_heads, cfg.kv_lora_rank
+    cq = rmsnorm(matmul(x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"]).astype(x.dtype)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+
+    dkv = matmul(x, p["w_dkv"])
+    c_new, kr_new = jnp.split(dkv, [r], axis=-1)
+    c_new = rmsnorm(c_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None], cfg.rope_theta)
+
+    s_cache = cache_ckv.shape[1]
+    oh = jax.nn.one_hot(pos, s_cache, dtype=cache_ckv.dtype)     # (B,S)
+    cache_ckv = cache_ckv * (1 - oh[:, :, None]) + c_new * oh[:, :, None]
+    cache_kr = cache_kr * (1 - oh[:, :, None]) + kr_new[:, :, 0, :] * oh[:, :, None]
+
+    w_uk = p["w_ukv"][:, :, :cfg.qk_nope_dim]                    # (R,H,nope)
+    w_uv = p["w_ukv"][:, :, cfg.qk_nope_dim:]                    # (R,H,v)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk).astype(x.dtype)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    sc = (jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv,
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bshk,btk->bhst", q_rope, cache_kr,
+                       preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(s_cache)[None, :] <= pos[:, None]
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)
+    wgt = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", wgt.astype(x.dtype), cache_ckv,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, w_uv).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+    return y, cache_ckv, cache_kr

@@ -1,0 +1,116 @@
+"""Shared neural building blocks (pure JAX, no flax).
+
+Conventions:
+- params are nested dicts of jnp arrays;
+- compute dtype is cfg.dtype (bf16 target), norms/softmax/accumulation f32;
+- every matmul passes ``preferred_element_type=float32`` so the MXU
+  accumulates in f32 regardless of operand dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with f32 accumulation, result cast back to x.dtype."""
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def einsum(spec: str, *xs: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.einsum(spec, *xs, preferred_element_type=jnp.float32)
+    return out.astype(xs[0].dtype)
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int) -> jnp.ndarray:
+    return jnp.zeros((d,), jnp.float32)  # gemma-style (1 + w) parameterization
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            f32: bool = True) -> jnp.ndarray:
+    """RMSNorm. ``f32=True`` upcasts activations (paper-faithful numerics);
+    ``f32=False`` squares in bf16 with f32 mean accumulation — avoids the
+    f32 residual-stack materialization XLA hoists into the layer scan (see
+    EXPERIMENTS.md §Perf llama3 iteration 1)."""
+    if f32:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+        return y.astype(x.dtype)
+    var = jnp.mean(x * x, axis=-1, keepdims=True, dtype=jnp.float32)
+    scale = jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return (x * scale.astype(x.dtype)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotary over last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                      # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- SwiGLU
+def swiglu_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype),
+        "up": dense_init(k2, d, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = matmul(x, p["gate"])
+    u = matmul(x, p["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return matmul(h, p["down"])
+
+
+# -------------------------------------------------------------- embedding
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 scale: bool = True) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray,
+            softcap: float = 0.0) -> jnp.ndarray:
+    """Logits head. table: (V, d) (tied) -> x @ table.T in f32."""
+    logits = jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

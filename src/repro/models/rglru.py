@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal-mixing block is:  x -> [branch A: linear -> GeLU] ⊙
+[branch B: linear -> causal conv1d(width 4) -> RG-LRU] -> linear out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t)          recurrence gate
+    i_t = sigmoid(W_x x_t)          input gate
+    a_t = exp(c * softplus(Λ) * (-r_t))          ∈ (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t²) * (i_t ⊙ x_t)
+
+It is a *linear* recurrence in h, so training uses
+``jax.lax.associative_scan`` (log-depth on TPU) — the hardware-adapted
+replacement for the paper-series' custom GPU scan kernel. Decode is a single
+O(1) state update, which is why recurrentgemma runs the long_500k cell.
+
+Gates use block-diagonal projections (8 blocks) as in the Griffin reference.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, matmul
+
+_C = 8.0
+_BLOCKS = 8
+
+
+def rglru_init(cfg: ModelConfig, key) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    bw = w // _BLOCKS
+    # Λ init so a^c ~ U[0.9, 0.999] per Griffin appendix
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0)  # softplus^-1(-ln u / c)
+    return {
+        "in_gelu": dense_init(ks[1], d, w, dt),
+        "in_rnn": dense_init(ks[2], d, w, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": dense_init(ks[4], bw, _BLOCKS * bw, jnp.float32
+                             ).reshape(bw, _BLOCKS, bw).swapaxes(0, 1),
+        "gate_x": dense_init(ks[5], bw, _BLOCKS * bw, jnp.float32
+                             ).reshape(bw, _BLOCKS, bw).swapaxes(0, 1),
+        "lambda": lam,
+        "out": dense_init(ks[6], w, d, dt),
+    }
+
+
+def _gates(p: Dict, x: jnp.ndarray):
+    """Block-diagonal gate projections. x: (..., W) f32."""
+    shp = x.shape[:-1]
+    w = x.shape[-1]
+    xb = x.reshape(shp + (_BLOCKS, w // _BLOCKS))
+    r = jax.nn.sigmoid(jnp.einsum("...bi,bij->...bj", xb, p["gate_a"])
+                       ).reshape(shp + (w,))
+    i = jax.nn.sigmoid(jnp.einsum("...bi,bij->...bj", xb, p["gate_x"])
+                       ).reshape(shp + (w,))
+    return r, i
+
+
+def _conv1d(p: Dict, x: jnp.ndarray, state: jnp.ndarray = None):
+    """Causal depthwise conv, width K. x: (B,S,W). state: (B,K-1,W) or None."""
+    k = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out + p["conv_b"], new_state
+
+
+def _rglru_coeffs(p: Dict, x: jnp.ndarray):
+    """a_t, b_t = gated decay and input for the linear recurrence (f32)."""
+    xf = x.astype(jnp.float32)
+    r, i = _gates(p, xf)
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r        # (B,S,W)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically safe form
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: Dict, x: jnp.ndarray, h0: jnp.ndarray = None):
+    """Associative-scan linear recurrence. x: (B,S,W) -> (y, h_last)."""
+    a, b = _rglru_coeffs(p, x)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Full-sequence Griffin recurrent block. x: (B,S,d) -> (B,S,d)."""
+    g = jax.nn.gelu(matmul(x, p["in_gelu"]).astype(jnp.float32))
+    u = matmul(x, p["in_rnn"])
+    u, _ = _conv1d(p, u)
+    h, _ = rglru_scan(p, u)
+    y = (g * h.astype(jnp.float32)).astype(x.dtype)
+    return matmul(y, p["out"])
+
+
+def rglru_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                 state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """O(1) decode step. x: (B,1,d); state: {'h': (B,W), 'conv': (B,K-1,W)}."""
+    g = jax.nn.gelu(matmul(x, p["in_gelu"]).astype(jnp.float32))
+    u = matmul(x, p["in_rnn"])
+    u, conv_state = _conv1d(p, u, state["conv"])
+    a, b = _rglru_coeffs(p, u)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]    # (B,W)
+    y = (g[:, 0] * h).astype(x.dtype)[:, None]
+    out = matmul(y, p["out"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w = cfg.lru_width_
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

@@ -1,0 +1,478 @@
+"""Transformer assembly: init / forward / loss / prefill / decode for every
+assigned architecture, driven entirely by :class:`ModelConfig`.
+
+Layer-stacking strategy: consecutive layers of the same block kind form a
+*run*; each run's params are stacked on a leading axis and applied with one
+``lax.scan`` (HLO stays O(#runs), not O(#layers) — an 80-layer dense model
+compiles as a single scan; RecurrentGemma's (rglru, rglru, local)×8+2
+pattern becomes 26 runs of tiny bodies; DeepSeek is dense-prefix + MoE-run).
+
+Memory discipline:
+- per-block remat (``cfg.remat``) wraps the scan body;
+- the LM loss never materializes (B, S, V) logits: it scans over sequence
+  chunks (``cfg.loss_chunk``) with a remat'd chunk body, so peak live loss
+  memory is (B, C, V/shards).
+
+Decode: the KV/state cache is a pytree mirroring the run structure; caches
+are donated by the serve step so XLA updates them in place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+
+
+# ================================================================= structure
+def _runs(blocks: List[str]) -> List[Tuple[str, int]]:
+    """Group consecutive equal block kinds: ['a','a','b'] -> [('a',2),('b',1)]."""
+    out: List[Tuple[str, int]] = []
+    for b in blocks:
+        if out and out[-1][0] == b:
+            out[-1] = (b, out[-1][1] + 1)
+        else:
+            out.append((b, 1))
+    return out
+
+
+def _stack(trees: List[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ==================================================================== params
+def _block_init(cfg: ModelConfig, kind: str, key) -> Dict:
+    mixer, mlp = kind.split(":")
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "norm2": rmsnorm_init(cfg.d_model),
+    }
+    if mixer in ("attn", "local"):
+        p["mix"] = (attn.mla_init(cfg, k1) if cfg.mla
+                    else attn.attn_init(cfg, k1))
+    elif mixer == "rglru":
+        p["mix"] = rglru_mod.rglru_init(cfg, k1)
+    elif mixer == "rwkv":
+        p["mix"] = rwkv_mod.rwkv_init(cfg, k1)  # includes channel-mix
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if mixer != "rwkv":
+        if mlp == "moe":
+            p["mlp"] = moe_mod.moe_init(cfg, k2)
+        else:
+            p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff,
+                                   jnp.dtype(cfg.dtype))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = cfg.blocks()
+    runs = _runs(blocks)
+    run_params, i = [], 0
+    for kind, count in runs:
+        run_params.append(_stack([_block_init(cfg, kind, keys[i + j])
+                                  for j in range(count)]))
+        i += count
+    p: Dict[str, Any] = {
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dt),
+        "runs": run_params,
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-2], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.mtp:
+        k = keys[-3]
+        p["mtp"] = {
+            "proj": dense_init(k, 2 * cfg.d_model, cfg.d_model, dt),
+            "block": _block_init(cfg, "attn:dense", jax.random.fold_in(k, 1)),
+            "norm": rmsnorm_init(cfg.d_model),
+        }
+    return p
+
+
+def param_specs(cfg: ModelConfig, key=None):
+    """ShapeDtypeStruct pytree of the params (no allocation) for AOT."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# =================================================================== forward
+def _block_apply(cfg: ModelConfig, kind: str, p: Dict, x: jnp.ndarray,
+                 positions: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    mixer, mlp = kind.split(":")
+    aux: Dict[str, jnp.ndarray] = {}
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps, cfg.norm_f32)
+    if mixer == "attn":
+        y = (attn.mla_block(cfg, p["mix"], h, positions) if cfg.mla
+             else attn.attention_block(cfg, p["mix"], h, positions))
+    elif mixer == "local":
+        y = attn.attention_block(cfg, p["mix"], h, positions,
+                                 window=cfg.window)
+    elif mixer == "rglru":
+        y = rglru_mod.rglru_block(cfg, p["mix"], h)
+    elif mixer == "rwkv":
+        y = rwkv_mod.rwkv_block(cfg, p["mix"], h)
+    x = x + y
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps, cfg.norm_f32)
+    if mixer == "rwkv":
+        prev = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+        y2, _ = rwkv_mod.channel_mix(cfg, p["mix"], h2, prev)
+    elif mlp == "moe":
+        y2, aux = moe_mod.moe_block(cfg, p["mlp"], h2)
+    else:
+        y2 = swiglu(p["mlp"], h2)
+    x = x + y2
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def forward(cfg: ModelConfig, params: Dict, inputs: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
+    """inputs: (B, S) int tokens, or (B, S, d) embeddings (stub frontends).
+    Returns (hidden (B,S,d), aux losses)."""
+    if inputs.ndim == 2:
+        x = embed_lookup(params["embed"], inputs)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, "batch", "seq", "embed")
+
+    aux_all: List[Dict] = []
+    for (kind, count), stacked in zip(_runs(cfg.blocks()), params["runs"]):
+        body = _remat(cfg, functools.partial(_block_apply, cfg, kind))
+
+        def scan_body(carry, layer_p):
+            y, aux = body(layer_p, carry, positions)
+            return y, aux
+
+        def scan_fn(x, stacked=stacked, scan_body=scan_body):
+            return jax.lax.scan(scan_body, x, stacked)
+
+        x, aux = scan_fn(x)
+        aux_all.append(jax.tree.map(jnp.sum, aux))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    aux = {}
+    for a in aux_all:
+        for k, v in a.items():
+            aux[k] = aux.get(k, 0.0) + v
+    return x, aux
+
+
+# ====================================================================== loss
+def _head_table(cfg: ModelConfig, params: Dict) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"]
+    return params["lm_head"].T  # (V, d) view for unembed
+
+
+def lm_loss(cfg: ModelConfig, params: Dict, hidden: jnp.ndarray,
+            labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+            ) -> jnp.ndarray:
+    """Mean next-token CE without materializing (B, S, V): scan over
+    ``cfg.loss_chunk``-sized sequence chunks with a remat'd body."""
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    table = _head_table(cfg, params)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    h_ch = jnp.moveaxis(hidden.reshape(b, n, c, d), 1, 0)
+    y_ch = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    m_ch = jnp.moveaxis(mask.reshape(b, n, c).astype(jnp.float32), 1, 0)
+
+    def chunk(carry, inp):
+        h, y, m = inp
+        logits = unembed(h, table, cfg.logit_softcap)        # (B,C,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    chunk = _remat(cfg, chunk) if cfg.remat != "none" else chunk
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (h_ch, y_ch, m_ch))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict,
+            aux_weights: Tuple[float, float] = (0.01, 1e-3)) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {'inputs': tokens (B,S) or embeds (B,S,d), 'labels': (B,S),
+    optional 'mask': (B,S)} -> (scalar loss, metrics)."""
+    hidden, aux = forward(cfg, params, batch["inputs"])
+    loss = lm_loss(cfg, params, hidden, batch["labels"], batch.get("mask"))
+    metrics = {"ce": loss}
+    if "moe_lb" in aux:
+        n_moe = max(sum(1 for k in cfg.blocks() if k.endswith(":moe")), 1)
+        lb = aux["moe_lb"] / n_moe
+        z = aux["moe_z"] / n_moe
+        loss = loss + aux_weights[0] * lb + aux_weights[1] * z
+        metrics.update(moe_lb=lb, moe_z=z)
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(cfg, params, hidden, batch)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(cfg: ModelConfig, params: Dict, hidden: jnp.ndarray,
+              batch: Dict) -> jnp.ndarray:
+    """DeepSeek-V3 multi-token prediction: one extra block predicts t+2
+    from [h_t ; emb(tok_{t+1})]."""
+    p = params["mtp"]
+    tokens = batch["inputs"]
+    if tokens.ndim != 2:  # embedding-input archs: MTP needs token ids
+        return jnp.float32(0.0)
+    b, s = tokens.shape
+    # keep full length S (chunked attention & loss need S % chunk == 0):
+    # position t sees [h_t ; emb(tok_{t+1})] and predicts tok_{t+2};
+    # the final position is masked (no t+1 token).
+    emb_next = embed_lookup(
+        params["embed"],
+        jnp.concatenate([tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], 1))
+    h_in = jnp.concatenate([hidden, emb_next], axis=-1)
+    h_in = jnp.einsum("bsd,de->bse", h_in, p["proj"]).astype(hidden.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h2, _ = _block_apply(cfg, "attn:dense", p["block"], h_in, pos)
+    h2 = rmsnorm(h2, p["norm"], cfg.norm_eps)
+    # labels2[t] = labels[t+1] (= tok_{t+2}); last position invalid
+    labels2 = jnp.concatenate(
+        [batch["labels"][:, 1:], jnp.zeros((b, 1), batch["labels"].dtype)], 1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+        axis=1)
+    return lm_loss(cfg, params, h2, labels2, mask)
+
+
+# ===================================================================== cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Decode cache pytree mirroring the run structure.
+
+    attn caches are (R, B, S, ...); 'local' runs bound S by the window
+    (ring buffer); recurrent runs carry O(1) state."""
+    dt = jnp.dtype(cfg.dtype)
+    caches = []
+    for kind, count in _runs(cfg.blocks()):
+        mixer = kind.split(":")[0]
+        if mixer in ("attn", "local"):
+            s = min(max_len, cfg.window) if (mixer == "local" and cfg.window
+                                             ) else max_len
+            if cfg.mla:
+                c = {"ckv": jnp.zeros((count, batch, s, cfg.kv_lora_rank), dt),
+                     "kr": jnp.zeros((count, batch, s, cfg.qk_rope_dim), dt)}
+            else:
+                kh, dh = cfg.n_kv_heads, cfg.head_dim_
+                c = {"k": jnp.zeros((count, batch, s, kh, dh), dt),
+                     "v": jnp.zeros((count, batch, s, kh, dh), dt)}
+        elif mixer == "rglru":
+            st = rglru_mod.rglru_state_init(cfg, batch, dt)
+            c = jax.tree.map(lambda x: jnp.broadcast_to(
+                x, (count,) + x.shape).copy(), st)
+        elif mixer == "rwkv":
+            st = rwkv_mod.rwkv_state_init(cfg, batch, dt)
+            c = jax.tree.map(lambda x: jnp.broadcast_to(
+                x, (count,) + x.shape).copy(), st)
+        caches.append(c)
+    return {"runs": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: Dict, cache: Dict,
+                  x: jnp.ndarray, pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    mixer, mlp = kind.split(":")
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps, cfg.norm_f32)
+    if mixer in ("attn", "local"):
+        if cfg.mla:
+            y, ckv, kr = attn.mla_decode(cfg, p["mix"], h, cache["ckv"],
+                                         cache["kr"], pos)
+            cache = {"ckv": ckv, "kr": kr}
+        else:
+            window = cfg.window if mixer == "local" else 0
+            y, ck, cv = attn.attn_decode(cfg, p["mix"], h, cache["k"],
+                                         cache["v"], pos, window=window)
+            cache = {"k": ck, "v": cv}
+    elif mixer == "rglru":
+        y, cache = rglru_mod.rglru_decode(cfg, p["mix"], h, cache)
+    elif mixer == "rwkv":
+        y, cache = rwkv_mod.rwkv_decode(cfg, p["mix"], h, cache)
+    x = x + y
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps, cfg.norm_f32)
+    if mixer == "rwkv":
+        y2, cm_prev = rwkv_mod.channel_mix(cfg, p["mix"], h2,
+                                           cache["cm_prev"])
+        cache = dict(cache, cm_prev=cm_prev)
+    elif mlp == "moe":
+        y2, _ = moe_mod.moe_block(cfg, p["mlp"], h2)
+    else:
+        y2 = swiglu(p["mlp"], h2)
+    return x + y2, cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """One serving step: tokens (B,) or embeddings (B, d) -> (logits (B, V),
+    updated cache). Cache['pos'] tracks per-sequence absolute position."""
+    pos = cache["pos"]
+    if tokens.ndim == 1:
+        x = embed_lookup(params["embed"], tokens[:, None])
+    else:
+        x = tokens[:, None, :].astype(jnp.dtype(cfg.dtype))
+    new_caches = []
+    for (kind, count), stacked_p, stacked_c in zip(
+            _runs(cfg.blocks()), params["runs"], cache["runs"]):
+
+        def body(x, layer):
+            lp, lc = layer
+            y, nc = _block_decode(cfg, kind, lp, lc, x, pos)
+            return y, nc
+
+        x, nc = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_caches.append(nc)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    logits = unembed(x[:, 0], _head_table(cfg, params), cfg.logit_softcap)
+    return logits, {"runs": new_caches, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params: Dict, inputs: jnp.ndarray,
+            lengths: jnp.ndarray, max_len: int
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Process the prompt, build the cache. inputs: (B, S_p) tokens or
+    (B, S_p, d) embeds; lengths: (B,) valid prompt lengths.
+    Returns (last-position logits (B, V), cache)."""
+    b = inputs.shape[0]
+    s_p = inputs.shape[1]
+    if inputs.ndim == 2:
+        x = embed_lookup(params["embed"], inputs)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(s_p, dtype=jnp.int32), (b, s_p))
+    cache = init_cache(cfg, b, max_len)
+    new_caches = []
+    for (kind, count), stacked_p, stacked_c in zip(
+            _runs(cfg.blocks()), params["runs"], cache["runs"]):
+        mixer = kind.split(":")[0]
+
+        def body(x, layer, kind=kind, mixer=mixer):
+            lp, lc = layer
+            h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            if mixer in ("attn", "local"):
+                window = cfg.window if mixer == "local" else 0
+                if cfg.mla:
+                    y, lc = _mla_prefill(cfg, lp["mix"], h, positions, lc)
+                else:
+                    y, lc = _attn_prefill(cfg, lp["mix"], h, positions, lc,
+                                          window)
+            elif mixer == "rglru":
+                y, lc = _rglru_prefill(cfg, lp["mix"], h, lc)
+            elif mixer == "rwkv":
+                y, lc = _rwkv_prefill(cfg, lp["mix"], h, lc)
+            x = x + y
+            h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            if mixer == "rwkv":
+                prev = jnp.zeros((b, x.shape[-1]), x.dtype)
+                y2, cm_prev = rwkv_mod.channel_mix(cfg, lp["mix"], h2, prev)
+                lc = dict(lc, cm_prev=cm_prev)
+            elif kind.endswith(":moe"):
+                y2, _ = moe_mod.moe_block(cfg, lp["mlp"], h2)
+            else:
+                y2 = swiglu(lp["mlp"], h2)
+            return x + y2, lc
+
+        x, nc = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        new_caches.append(nc)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    last = jnp.take_along_axis(
+        x, jnp.maximum(lengths - 1, 0)[:, None, None].astype(jnp.int32),
+        axis=1)[:, 0]
+    logits = unembed(last, _head_table(cfg, params), cfg.logit_softcap)
+    return logits, {"runs": new_caches, "pos": lengths.astype(jnp.int32)}
+
+
+def _attn_prefill(cfg, p, h, positions, lc, window):
+    q, k, v = attn._qkv(cfg, p, h, positions)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk, vv = attn._repeat_kv(k, groups), attn._repeat_kv(v, groups)
+    s = h.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "naive" if s <= max(cfg.attn_chunk_q, 512) else "chunked"
+    if impl == "naive":
+        out = attn._naive_attention(q, kk, vv, positions, window)
+    else:
+        out = attn._chunked_attention(q, kk, vv, positions, window,
+                                      cfg.attn_chunk_q, cfg.attn_chunk_kv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"]).astype(h.dtype)
+    s_cache = lc["k"].shape[1]
+    if s <= s_cache:
+        ck = jax.lax.dynamic_update_slice_in_dim(lc["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(lc["v"], v, 0, axis=1)
+    else:  # ring window cache: keep the last s_cache positions
+        ck = k[:, -s_cache:]
+        cv = v[:, -s_cache:]
+        # rotate so slot (pos % s_cache) holds position pos
+        shift = (s % s_cache)
+        ck = jnp.roll(ck, shift, axis=1)
+        cv = jnp.roll(cv, shift, axis=1)
+    return y, {"k": ck, "v": cv}
+
+
+def _mla_prefill(cfg, p, h, positions, lc):
+    from repro.models.layers import matmul
+    y = attn.mla_block(cfg, p, h, positions)
+    dkv = matmul(h, p["w_dkv"])
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = attn.apply_rope(k_rope[:, :, None, :], positions,
+                             cfg.rope_theta)[:, :, 0]
+    ckv = jax.lax.dynamic_update_slice_in_dim(lc["ckv"], c_kv, 0, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(lc["kr"], k_rope, 0, axis=1)
+    return y, {"ckv": ckv, "kr": kr}
+
+
+def _rglru_prefill(cfg, p, h, lc):
+    from repro.models.layers import matmul
+    g = jax.nn.gelu(matmul(h, p["in_gelu"]).astype(jnp.float32))
+    u = matmul(h, p["in_rnn"])
+    u, conv_state = rglru_mod._conv1d(p, u, lc["conv"])
+    hh, h_last = rglru_mod.rglru_scan(p, u, lc["h"])
+    y = (g * hh.astype(jnp.float32)).astype(h.dtype)
+    return matmul(y, p["out"]), {"h": h_last, "conv": conv_state}
+
+
+def _rwkv_prefill(cfg, p, h, lc):
+    y, tm_prev, s_last = rwkv_mod.time_mix(cfg, p, h, lc["tm_prev"], lc["s"])
+    return y, dict(lc, s=s_last, tm_prev=tm_prev)

@@ -1,0 +1,26 @@
+"""Stream-data simulation substrate (the paper's contribution).
+
+Pipeline stages (paper Fig. 4):
+  POSD  -> :mod:`repro.streamsim.preprocess`
+  NSSD  -> :mod:`repro.streamsim.nsa`         (Algorithm 1)
+  PSD   -> :mod:`repro.streamsim.producer`    (Algorithm 2)
+  SPS   -> consumer side: repro.training / repro.serving
+
+Supporting pieces: synthetic datasets, the stream store ("database"),
+the Kafka-analogue bounded queue, volatility metrics, and the controller.
+"""
+
+from repro.streamsim.datasets import (  # noqa: F401
+    DATASETS,
+    make_stream,
+    sogouq,
+    traffic,
+    userbehavior,
+)
+from repro.streamsim.preprocess import Stream, preprocess  # noqa: F401
+from repro.streamsim.nsa import nsa, nsa_paper, scale_stamps  # noqa: F401
+from repro.streamsim.metrics import volatility, per_second_counts  # noqa: F401
+from repro.streamsim.store import StreamStore  # noqa: F401
+from repro.streamsim.queue import StreamQueue  # noqa: F401
+from repro.streamsim.producer import Producer, VirtualClock, RealClock  # noqa: F401
+from repro.streamsim.controller import Controller, SimulationReport  # noqa: F401

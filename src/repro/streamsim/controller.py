@@ -1,0 +1,164 @@
+"""Controller — the user-side core component (paper §4).
+
+The paper's controller has three functions, mirrored 1:1 here:
+  (1) control the producer to load + simulate a user-defined time range;
+  (2) collect physical/workload metrics of the stream processing system;
+  (3) manage metrics of different stream data for viewing.
+
+The paper collects metrics over the SPS's REST API into a "metrics
+repository"; here the consumers (training/serving loops) expose a metrics
+callback and the repository is a JSON directory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.streamsim.datasets import make_stream
+from repro.streamsim.metrics import Volatility, trend_correlation, volatility
+from repro.streamsim.nsa import compression_factor, nsa
+from repro.streamsim.preprocess import Stream, preprocess
+from repro.streamsim.producer import Producer, VirtualClock
+from repro.streamsim.queue import StreamQueue
+from repro.streamsim.store import StreamStore
+
+
+@dataclasses.dataclass
+class SimulationReport:
+    dataset: str
+    max_range: int
+    original_rows: int
+    simulated_rows: int
+    compression: float
+    original_volatility: Volatility
+    simulated_volatility: Volatility
+    trend_corr: float
+    preprocess_s: float
+    nsa_s: float
+    produce_s: float
+    consumer_metrics: Dict
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+class Controller:
+    def __init__(self, store_dir: str, metrics_dir: Optional[str] = None):
+        self.store = StreamStore(store_dir)
+        self.metrics_dir = Path(metrics_dir or (Path(store_dir) / "_metrics"))
+        self.metrics_dir.mkdir(parents=True, exist_ok=True)
+
+    # ----------------------------------------------------- (1) simulate/run
+    def prepare(self, dataset: str, *, scale: float = 1.0, seed: int = 0,
+                force: bool = False) -> Stream:
+        """POSD once, persist (preprocessing is a one-time job — paper §3.1)."""
+        key = f"{dataset}__orig"
+        if self.store.exists(key) and not force:
+            return self.store.get(key)
+        raw = make_stream(dataset, scale=scale, seed=seed)
+        stream = preprocess(raw)
+        self.store.put(key, stream, {"scale": scale, "seed": seed})
+        return stream
+
+    def simulate(self, dataset: str, max_range: int, *, scale: float = 1.0,
+                 seed: int = 0, force: bool = False) -> Stream:
+        """NSA once per (dataset, max_range), persist (paper §3.2: stored
+        'because repeated normalizing and sampling operations are not
+        performed')."""
+        key = f"{dataset}__sim{max_range}"
+        if self.store.exists(key) and not force:
+            return self.store.get(key)
+        original = self.prepare(dataset, scale=scale, seed=seed, force=force)
+        t0 = time.perf_counter()
+        sim = nsa(original, max_range)
+        self._last_nsa_s = time.perf_counter() - t0
+        self.store.put(key, sim, {"max_range": max_range})
+        return sim
+
+    def run(self, dataset: str, max_range: int,
+            consumer: Callable[[StreamQueue], Dict], *,
+            scale: float = 1.0, seed: int = 0,
+            queue_size: int = 64) -> SimulationReport:
+        """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
+
+        ``consumer`` drains the queue and returns its own metrics dict
+        (function (2): collecting workload metrics of the SPS)."""
+        t0 = time.perf_counter()
+        original = self.prepare(dataset, scale=scale, seed=seed)
+        t_pre = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sim = self.simulate(dataset, max_range, scale=scale, seed=seed)
+        t_nsa = getattr(self, "_last_nsa_s", time.perf_counter() - t0)
+
+        queue = StreamQueue(maxsize=queue_size)
+        producer = Producer(sim, queue, clock=VirtualClock())
+        t0 = time.perf_counter()
+        # virtual-time: producer fills, consumer drains (bounded queue means
+        # we interleave: run producer in a thread to honour backpressure)
+        import threading
+        status = [None]
+
+        def _produce():
+            status[0] = producer.run()
+
+        th = threading.Thread(target=_produce, daemon=True)
+        th.start()
+        consumer_metrics = consumer(queue)
+        th.join()
+        t_prod = time.perf_counter() - t0
+        if status[0] != 0:
+            raise RuntimeError("producer reported fault status")
+
+        report = SimulationReport(
+            dataset=dataset,
+            max_range=max_range,
+            original_rows=len(original),
+            simulated_rows=len(sim),
+            compression=compression_factor(original, max_range),
+            original_volatility=volatility(original),
+            simulated_volatility=volatility(sim, max_range),
+            trend_corr=trend_correlation(original, sim),
+            preprocess_s=t_pre,
+            nsa_s=t_nsa,
+            produce_s=t_prod,
+            consumer_metrics={**consumer_metrics, **queue.stats(),
+                              **producer.stats()},
+        )
+        self.save_metrics(report)
+        return report
+
+    # -------------------------------------------------- (3) metrics manager
+    def save_metrics(self, report: SimulationReport) -> Path:
+        path = self.metrics_dir / (
+            f"{report.dataset}_max{report.max_range}_{int(time.time()*1e3)}.json")
+        with open(path, "w") as f:
+            json.dump(report.to_json(), f, indent=2, default=_np_default)
+        return path
+
+    def list_metrics(self) -> List[Path]:
+        return sorted(self.metrics_dir.glob("*.json"))
+
+    def load_metrics(self) -> List[Dict]:
+        out = []
+        for p in self.list_metrics():
+            with open(p) as f:
+                out.append(json.load(f))
+        return out
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON serializable: {type(o)}")

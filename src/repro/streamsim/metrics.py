@@ -1,0 +1,92 @@
+"""Volatility & trend metrics (paper §5.2, formulas (2)-(4)).
+
+The paper evaluates simulation quality with three per-second statistics —
+Average, Variance, Standard Variance — over the arrival-count series
+``q_i`` (records in second ``i``). Formulas (3)/(4) in the paper text drop
+the square on the deviation (an obvious typesetting slip); we implement the
+standard population variance/σ, which reproduces the tables' magnitudes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.streamsim.preprocess import Stream
+
+
+@dataclasses.dataclass(frozen=True)
+class Volatility:
+    average: float
+    variance: float
+    std_variance: float
+    time_range: int
+
+    def as_row(self) -> str:
+        return (f"{self.time_range},{self.average:.2f},"
+                f"{self.variance:.2f},{self.std_variance:.2f}")
+
+
+def per_second_counts(stream: Stream, time_range: Optional[int] = None,
+                      *, use_scale_stamp: Optional[bool] = None) -> np.ndarray:
+    """Arrival counts q_i per (simulated or original) second.
+
+    For simulated streams the bucket is ``scale_stamp``; for original streams
+    it is ``floor(t - t_0)``.
+    """
+    if use_scale_stamp is None:
+        use_scale_stamp = stream.scale_stamp is not None
+    if use_scale_stamp:
+        if stream.scale_stamp is None:
+            raise ValueError("stream has no scale_stamp; run NSA first")
+        buckets = stream.scale_stamp
+        if time_range is None:
+            time_range = int(buckets.max()) + 1 if len(buckets) else 0
+    else:
+        if len(stream.t) == 0:
+            return np.zeros(0, dtype=np.int64)
+        buckets = np.floor(stream.t - stream.t[0]).astype(np.int64)
+        if time_range is None:
+            time_range = int(buckets.max()) + 1
+        buckets = np.clip(buckets, 0, time_range - 1)
+    return np.bincount(buckets, minlength=time_range)
+
+
+def volatility(stream: Stream, time_range: Optional[int] = None) -> Volatility:
+    """Average / Variance / StdVariance of q_i (paper formulas (2)-(4))."""
+    q = per_second_counts(stream, time_range)
+    tr = len(q)
+    if tr == 0:
+        return Volatility(0.0, 0.0, 0.0, 0)
+    avg = float(q.mean())
+    var = float(((q - avg) ** 2).mean())
+    return Volatility(avg, var, float(np.sqrt(var)), tr)
+
+
+def trend(stream: Stream, window_s: int = 600,
+          time_range: Optional[int] = None) -> np.ndarray:
+    """Moving-average trend of the per-second counts (the Figs. 1-3 curves)."""
+    q = per_second_counts(stream, time_range).astype(np.float64)
+    if len(q) == 0:
+        return q
+    w = min(window_s, len(q))
+    kernel = np.ones(w) / w
+    return np.convolve(q, kernel, mode="same")
+
+
+def trend_correlation(a: Stream, b: Stream, window_s: int = 60) -> float:
+    """Pearson correlation between two streams' trends, resampled to the
+    shorter series — quantifies the paper's 'similar trend' claim (Fig. 6)."""
+    ta, tb = trend(a, window_s), trend(b, window_s)
+    if len(ta) == 0 or len(tb) == 0:
+        return float("nan")
+    n = min(len(ta), len(tb))
+    # resample both to n points
+    ra = np.interp(np.linspace(0, 1, n), np.linspace(0, 1, len(ta)), ta)
+    rb = np.interp(np.linspace(0, 1, n), np.linspace(0, 1, len(tb)), tb)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / denom) if denom > 0 else float("nan")

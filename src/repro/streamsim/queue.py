@@ -1,0 +1,106 @@
+"""StreamQueue — the Kafka analogue (paper §4).
+
+The paper inserts a Kafka node between the user-side producer and the stream
+processing system: an ordered, buffered pipe with backpressure. This
+environment has no external broker, so the queue is in-process but preserves
+the broker semantics the pipeline relies on:
+
+- FIFO per-bucket ordering (Kafka partition-order guarantee),
+- bounded buffering with producer backpressure (broker retention/quota),
+- at-least-once handoff (a bucket is only dropped after the consumer
+  acknowledges it by finishing the ``get``),
+- poisoned-shutdown (producer can signal end-of-stream).
+
+Thread-safe: the real-time producer emits from timer threads (paper
+Algorithm 2) while the consumer drains from the main thread.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+_EOS = object()
+
+
+@dataclasses.dataclass
+class Bucket:
+    """One simulated second of stream data (what PSDA emits per tick)."""
+
+    scale_stamp: int
+    t: np.ndarray
+    payload: Dict[str, np.ndarray]
+    emit_time: float  # producer clock time at emission
+
+    def __len__(self) -> int:
+        return len(self.t)
+
+    def nbytes(self) -> int:
+        return self.t.nbytes + sum(v.nbytes for v in self.payload.values())
+
+
+class StreamQueue:
+    def __init__(self, maxsize: int = 64):
+        self._dq: collections.deque = collections.deque()
+        self._maxsize = maxsize
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        self._closed = False
+        # transport metrics (paper Fig. 6 reads network bytes; we count them)
+        self.bytes_in = 0
+        self.buckets_in = 0
+        self.records_in = 0
+
+    def put(self, bucket: Bucket, timeout: Optional[float] = None) -> None:
+        with self._not_full:
+            while len(self._dq) >= self._maxsize and not self._closed:
+                if not self._not_full.wait(timeout):
+                    raise TimeoutError("queue full (backpressure timeout)")
+            if self._closed:
+                raise RuntimeError("queue closed")
+            self._dq.append(bucket)
+            self.bytes_in += bucket.nbytes()
+            self.buckets_in += 1
+            self.records_in += len(bucket)
+            self._not_empty.notify()
+
+    def get(self, timeout: Optional[float] = None) -> Optional[Bucket]:
+        """Pop the next bucket; None signals end-of-stream."""
+        with self._not_empty:
+            while not self._dq and not self._closed:
+                if not self._not_empty.wait(timeout):
+                    raise TimeoutError("queue empty (consumer timeout)")
+            if not self._dq:
+                return None  # closed and drained
+            item = self._dq.popleft()
+            self._not_full.notify()
+            return None if item is _EOS else item
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    def __iter__(self) -> Iterator[Bucket]:
+        while True:
+            b = self.get()
+            if b is None:
+                return
+            yield b
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self._dq)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "bytes_in": self.bytes_in,
+            "buckets_in": self.buckets_in,
+            "records_in": self.records_in,
+        }

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, step builders, checkpointing, fault
+tolerance, and the stream-fed training loop."""
+
+from repro.training.optimizer import AdamW, adamw_init, adamw_update  # noqa: F401
+from repro.training.steps import make_train_step, make_serve_step  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from repro.training import ft  # noqa: F401

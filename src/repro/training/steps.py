@@ -1,0 +1,155 @@
+"""Step builders: the jit-compiled train / prefill / serve steps with their
+sharding contracts. These are what the dry-run lowers and what the train
+loop / serving engine execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.api import sharding_rules
+from repro.distributed.sharding import (
+    activation_rules,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamW, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: transformer.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        params, opt_state, stats = adamw_update(opt, grads, opt_state, params)
+        metrics = dict(metrics, **stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_forward_step(cfg: ModelConfig):
+    """Inference forward (prefill shape): returns last-position logits."""
+
+    def prefill_step(params, inputs, lengths):
+        logits, cache = transformer.prefill(cfg, params, inputs, lengths,
+                                            max_len=inputs.shape[1])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode tick: (params, cache, tokens) -> (logits, cache).
+    The cache is donated at jit time (in-place update)."""
+
+    def serve_step(params, cache, tokens):
+        return transformer.decode_step(cfg, params, cache, tokens)
+
+    return serve_step
+
+
+# ------------------------------------------------------------------ jitted
+def jit_train_step(cfg: ModelConfig, opt: AdamW, mesh: Optional[Mesh] = None,
+                   policy: str = "fsdp_tp", donate: bool = True,
+                   shard_seq: bool = False):
+    """Sharded jit of the train step against a mesh (or plain jit if None)."""
+    step = make_train_step(cfg, opt)
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    pshape = transformer.param_specs(cfg)
+    pspec = param_pspecs(cfg, mesh, pshape, policy)
+    oshape = jax.eval_shape(
+        lambda: {"step": jnp.zeros((), jnp.int32),
+                 "m": jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                                   pshape),
+                 "v": jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                                   pshape)})
+    ospec = {"step": P(), "m": pspec, "v": pspec}
+    bp = batch_pspec(mesh)
+    bspec = {"inputs": bp["tokens"] if cfg.input_mode == "tokens"
+             else bp["embeds"],
+             "labels": bp["labels"]}
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    rules = activation_rules(mesh, shard_seq=shard_seq)
+
+    def wrapped(params, opt_state, batch):
+        with sharding_rules(mesh, rules):
+            return step(params, opt_state, batch)
+
+    return jax.jit(
+        wrapped,
+        in_shardings=(ns(pspec), ns(ospec), ns(bspec)),
+        out_shardings=(ns(pspec), ns(ospec), None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def jit_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                   batch: int = 1, max_len: int = 0,
+                   shard_seq: bool = True, donate: bool = True):
+    step = make_serve_step(cfg)
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,) if donate else ())
+    pshape = transformer.param_specs(cfg)
+    pspec = param_pspecs(cfg, mesh, pshape, "tp")
+    cshape = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len))
+    cspec = cache_pspecs(cfg, mesh, cshape, shard_seq=shard_seq)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    dp = dp if batch % _size(mesh, dp) == 0 else None
+    tspec = P(dp) if cfg.input_mode == "tokens" else P(dp, None)
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    rules = activation_rules(mesh)
+
+    def wrapped(params, cache, tokens):
+        with sharding_rules(mesh, rules):
+            return step(params, cache, tokens)
+
+    return jax.jit(
+        wrapped,
+        in_shardings=(ns(pspec), ns(cspec), ns(tspec)),
+        out_shardings=(None, ns(cspec)),
+        donate_argnums=(1,) if donate else (),
+    )
+
+
+def jit_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    step = make_forward_step(cfg)
+    if mesh is None:
+        return jax.jit(step)
+    pshape = transformer.param_specs(cfg)
+    pspec = param_pspecs(cfg, mesh, pshape, "tp")
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    ispec = P(dp, None) if cfg.input_mode == "tokens" else P(dp, None, None)
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    rules = activation_rules(mesh)
+
+    def wrapped(params, inputs, lengths):
+        with sharding_rules(mesh, rules):
+            return step(params, inputs, lengths)
+
+    return jax.jit(wrapped,
+                   in_shardings=(ns(pspec), ns(ispec), ns(P(dp))),
+                   out_shardings=None)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes]))

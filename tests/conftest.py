@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS device-count here — smoke tests and benches
+# must see 1 device; only launch/dryrun.py forces 512 placeholder devices.
+
+
+@pytest.fixture(scope="session")
+def small_stream():
+    """A preprocessed small-but-real stream (diurnal shape intact)."""
+    from repro.streamsim import make_stream, preprocess
+    return preprocess(make_stream("traffic", scale=0.01, seed=7))

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.stream_sample import TILE
+
+
+def _sorted_times(n, span, seed, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.uniform(0, span, n)).astype(dtype)
+    t[0], t[-1] = 0.0, span
+    return t
+
+
+class TestStreamSample:
+    @pytest.mark.parametrize("n", [64, 1024, 4096, 10_000])
+    @pytest.mark.parametrize("max_range", [16, 128, 600])
+    def test_matches_oracle(self, n, max_range):
+        t = _sorted_times(n, 86_400.0, seed=n + max_range)
+        mult = 86_400.0 / max_range
+        ss_k, keep_k = ops.stream_sample(t, max_range, mult)
+        ss_o, keep_o = ops.stream_sample_ref(t, max_range, mult)
+        np.testing.assert_array_equal(np.asarray(ss_k), np.asarray(ss_o))
+        np.testing.assert_array_equal(np.asarray(keep_k), np.asarray(keep_o))
+
+    def test_matches_host_nsa(self):
+        from repro.streamsim.nsa import scale_stamps, systematic_keep_mask
+        t = _sorted_times(20_000, 86_400.0, seed=1)
+        mr, mult = 300, 86_400.0 / 300
+        ss_np = scale_stamps(t, mr)
+        keep_np = systematic_keep_mask(ss_np, mr, mult)
+        ss_k, keep_k = ops.stream_sample(t, mr, mult)
+        assert np.mean(np.asarray(ss_k) == ss_np) > 0.999
+        assert np.mean(np.asarray(keep_k) == keep_np) > 0.999
+
+    @pytest.mark.parametrize("dtype", [np.float64, np.float32])
+    def test_dtypes(self, dtype):
+        t = _sorted_times(TILE, 1000.0, seed=3, dtype=dtype)
+        ss, keep = ops.stream_sample(t, 50, 20.0)
+        assert ss.dtype == jnp.int32
+        assert int(keep.sum()) >= 50 // 2
+
+
+class TestBucketHist:
+    @pytest.mark.parametrize("n,max_range", [(512, 16), (4096, 128),
+                                             (20_000, 600), (1024, 3600)])
+    def test_matches_oracle(self, n, max_range):
+        rng = np.random.default_rng(n)
+        ss = np.sort(rng.integers(0, max_range, n)).astype(np.int32)
+        h_k = ops.bucket_hist(ss, max_range)
+        h_o = ref.bucket_hist_ref(jnp.asarray(ss), max_range)
+        np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_o))
+        assert int(h_k.sum()) == n
+
+
+class TestVolatility:
+    @pytest.mark.parametrize("n", [60, 600, 3600, 86_400])
+    def test_moments(self, n):
+        rng = np.random.default_rng(n)
+        q = rng.poisson(25.0, n).astype(np.float32)
+        avg, var, std = ops.volatility_stats(q)
+        assert np.isclose(float(avg), q.mean(), rtol=1e-5)
+        assert np.isclose(float(var), q.var(), rtol=1e-4)
+        assert np.isclose(float(std), q.std(), rtol=1e-4)
+
+    def test_against_ref(self):
+        q = np.arange(1024, dtype=np.float32)
+        s, s2 = ops.volatility_moments(q)
+        exp = ref.volatility_ref(jnp.asarray(q))
+        assert np.isclose(float(s), float(exp[0]))
+        assert np.isclose(float(s2), float(exp[1]), rtol=1e-6)
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("b,h,kh,d,s", [
+        (1, 4, 4, 32, 256),     # MHA
+        (2, 8, 2, 64, 512),     # GQA 4:1
+        (4, 16, 1, 64, 1024),   # MQA
+        (2, 12, 4, 128, 384),   # uneven block tail
+    ])
+    def test_matches_oracle(self, b, h, kh, d, s):
+        key = jax.random.PRNGKey(b * 100 + s)
+        q = jax.random.normal(key, (b, h, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, d))
+        lens = jax.random.randint(jax.random.fold_in(key, 3), (b,), 1, s + 1)
+        out = ops.flash_decode(q, k, v, lens, block_s=128)
+        exp = ref.flash_decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(0)
+        b, h, kh, d, s = 2, 8, 4, 64, 256
+        q = jax.random.normal(key, (b, h, d), jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, d),
+                              jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, d),
+                              jnp.bfloat16)
+        lens = jnp.full((b,), s, jnp.int32)
+        out = ops.flash_decode(q, k, v, lens, block_s=128)
+        exp = ref.flash_decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32),
+            rtol=5e-2, atol=5e-2)
+
+    def test_prefix_only_attention(self):
+        """Tokens beyond `lengths` must not influence the output."""
+        key = jax.random.PRNGKey(7)
+        b, h, kh, d, s = 2, 4, 2, 32, 256
+        q = jax.random.normal(key, (b, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, d))
+        lens = jnp.array([100, 40], jnp.int32)
+        out1 = ops.flash_decode(q, k, v, lens, block_s=64)
+        k2 = k.at[:, 150:].set(999.0)
+        v2 = v.at[:, 150:].set(-999.0)
+        out2 = ops.flash_decode(q, k2, v2, lens, block_s=64)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)

@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (reduced configs, one forward/train step on CPU,
+shape + finiteness assertions) plus model-level equivalence tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import transformer as T
+from repro.models.layers import unembed
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.input_mode == "embeddings":
+        inputs = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    else:
+        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
+                                cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_finite(self, arch):
+        cfg = get_smoke(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        hidden, aux = T.forward(cfg, params, batch["inputs"])
+        assert hidden.shape == (2, 32, cfg.d_model)
+        assert bool(jnp.isfinite(hidden.astype(jnp.float32)).all())
+
+    def test_train_step(self, arch):
+        cfg = get_smoke(arch)
+        from repro.training.optimizer import AdamW, adamw_init
+        from repro.training.steps import make_train_step
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, AdamW(lr=1e-3, warmup_steps=1)))
+        p2, o2, metrics = step(params, opt_state, _batch(cfg))
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(o2["step"]) == 1
+        # params must actually change
+        delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+            jax.tree.leaves(params), jax.tree.leaves(p2)))
+        assert delta > 0
+
+    def test_decode_matches_forward(self, arch):
+        """Greedy prefill+decode must agree with teacher-forced forward."""
+        cfg = get_smoke(arch)
+        if cfg.input_mode == "embeddings":
+            pytest.skip("decode consistency is a token-arch property")
+        params = T.init_params(cfg, jax.random.PRNGKey(1))
+        b, s = 2, 24
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                  cfg.vocab_size)
+        hidden, _ = T.forward(cfg, params, toks)
+        full_logits = unembed(hidden, T._head_table(cfg, params),
+                              cfg.logit_softcap)
+        lens = jnp.array([s, s])
+        pre_logits, cache = T.prefill(cfg, params, toks, lens, max_len=s + 4)
+        np.testing.assert_allclose(
+            np.asarray(pre_logits, np.float32),
+            np.asarray(full_logits[:, -1], np.float32), rtol=2e-3, atol=2e-3)
+        # one decode step vs forward on the extended sequence
+        nxt = jnp.argmax(pre_logits, -1).astype(jnp.int32)
+        dec_logits, cache = T.decode_step(cfg, params, cache, nxt)
+        toks2 = jnp.concatenate([toks, nxt[:, None]], 1)
+        hidden2, _ = T.forward(cfg, params, toks2)
+        full2 = unembed(hidden2[:, -1], T._head_table(cfg, params),
+                        cfg.logit_softcap)
+        np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                                   np.asarray(full2, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestEquivalences:
+    def test_chunked_attention_equals_naive(self):
+        cfg = get_smoke("llama3-8b").replace(attn_impl="naive")
+        cfg_c = cfg.replace(attn_impl="chunked", attn_chunk_q=8,
+                            attn_chunk_kv=16)
+        params = T.init_params(cfg, jax.random.PRNGKey(3))
+        toks = jax.random.randint(jax.random.PRNGKey(4), (2, 64), 0,
+                                  cfg.vocab_size)
+        h1, _ = T.forward(cfg, params, toks)
+        h2, _ = T.forward(cfg_c, params, toks)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_windowed_chunked_equals_naive(self):
+        cfg = get_smoke("recurrentgemma-2b")
+        cfg_n = cfg.replace(attn_impl="naive")
+        cfg_c = cfg.replace(attn_impl="chunked", attn_chunk_q=8,
+                            attn_chunk_kv=8)
+        params = T.init_params(cfg_n, jax.random.PRNGKey(5))
+        toks = jax.random.randint(jax.random.PRNGKey(6), (2, 48), 0,
+                                  cfg.vocab_size)
+        h1, _ = T.forward(cfg_n, params, toks)
+        h2, _ = T.forward(cfg_c, params, toks)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_remat_does_not_change_loss(self):
+        cfg = get_smoke("llama3-8b").replace(remat="none")
+        cfg_r = cfg.replace(remat="full")
+        params = T.init_params(cfg, jax.random.PRNGKey(7))
+        batch = _batch(cfg, seed=8)
+        l1, _ = T.loss_fn(cfg, params, batch)
+        l2, _ = T.loss_fn(cfg_r, params, batch)
+        assert np.isclose(float(l1), float(l2), rtol=1e-5)
+        g1 = jax.grad(lambda p: T.loss_fn(cfg, p, batch)[0])(params)
+        g2 = jax.grad(lambda p: T.loss_fn(cfg_r, p, batch)[0])(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-3, atol=1e-5)
+
+    def test_loss_chunking_invariant(self):
+        cfg = get_smoke("qwen3-32b").replace(loss_chunk=8)
+        cfg2 = cfg.replace(loss_chunk=32)
+        params = T.init_params(cfg, jax.random.PRNGKey(9))
+        batch = _batch(cfg, seed=10)
+        l1, _ = T.loss_fn(cfg, params, batch)
+        l2, _ = T.loss_fn(cfg2, params, batch)
+        assert np.isclose(float(l1), float(l2), rtol=1e-6)
+
+    def test_moe_capacity_drops_gracefully(self):
+        cfg = get_smoke("deepseek-v3-671b").replace(capacity_factor=0.25)
+        params = T.init_params(cfg, jax.random.PRNGKey(11))
+        batch = _batch(cfg, seed=12)
+        loss, metrics = T.loss_fn(cfg, params, batch)
+        assert np.isfinite(float(loss)), "token dropping must stay finite"
+
+    def test_rwkv_long_decode_state_is_constant_size(self):
+        cfg = get_smoke("rwkv6-1_6b")
+        cache8 = jax.eval_shape(lambda: T.init_cache(cfg, 2, 8))
+        cache512 = jax.eval_shape(lambda: T.init_cache(cfg, 2, 512))
+        b8 = sum(np.prod(l.shape) for l in jax.tree.leaves(cache8))
+        b512 = sum(np.prod(l.shape) for l in jax.tree.leaves(cache512))
+        assert b8 == b512, "attention-free state is O(1) in context"
+
+    def test_local_window_cache_bounded(self):
+        cfg = get_smoke("recurrentgemma-2b")  # window 16
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 2, 512))
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            name = str(path[-1])
+            if "'k'" in name or "'v'" in name:
+                assert leaf.shape[2] == cfg.window, \
+                    "local attention cache is a window ring buffer"

@@ -1,0 +1,108 @@
+"""Serving engine + stream-driven load tests."""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_stream import consumer_lm
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.load import stream_arrivals
+from repro.streamsim import (
+    Producer,
+    StreamQueue,
+    VirtualClock,
+    make_stream,
+    nsa,
+    preprocess,
+)
+
+
+def tiny_cfg():
+    return consumer_lm().replace(n_layers=2, d_model=64, n_heads=4,
+                                 n_kv_heads=2, head_dim=16, d_ff=128,
+                                 vocab_size=512, loss_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = tiny_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestEngine:
+    def test_single_request_completes(self, engine_setup):
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, slots=2, max_len=48, eos_id=-1)
+        rng = np.random.default_rng(0)
+        eng.submit(Request(rid=0, prompt=rng.integers(1, 512, 6,
+                                                      dtype=np.int32),
+                           max_new_tokens=5))
+        eng.drain()
+        assert eng.metrics.finished == 1
+        assert eng.metrics.tokens_out >= 5
+
+    def test_batched_requests_all_finish(self, engine_setup):
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params, slots=4, max_len=48, eos_id=-1)
+        rng = np.random.default_rng(1)
+        for i in range(10):
+            eng.submit(Request(rid=i,
+                               prompt=rng.integers(1, 512, 4 + i % 5,
+                                                   dtype=np.int32),
+                               max_new_tokens=4))
+        eng.drain()
+        assert eng.metrics.finished == 10
+        s = eng.metrics.summary()
+        assert s["queue_peak"] >= 6  # more requests than slots => queueing
+
+    def test_greedy_matches_unbatched_reference(self, engine_setup):
+        """Continuous batching must not change a sequence's outputs."""
+        cfg, params = engine_setup
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(1, 512, 8, dtype=np.int32)
+        # reference: dedicated engine with one slot
+        ref_eng = ServingEngine(cfg, params, slots=1, max_len=48, eos_id=-1)
+        ref_eng.submit(Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=6))
+        ref_eng.drain()
+        ref_tokens = ref_eng.metrics  # via request record below
+        # batched: same request + noise requests
+        eng = ServingEngine(cfg, params, slots=4, max_len=48, eos_id=-1)
+        target = Request(rid=0, prompt=prompt.copy(), max_new_tokens=6)
+        eng.submit(target)
+        for i in range(3):
+            eng.submit(Request(rid=i + 1,
+                               prompt=rng.integers(1, 512, 5,
+                                                   dtype=np.int32),
+                               max_new_tokens=6))
+        eng.drain()
+        # re-run reference to capture generated ids
+        ref = Request(rid=9, prompt=prompt.copy(), max_new_tokens=6)
+        ref_eng2 = ServingEngine(cfg, params, slots=1, max_len=48, eos_id=-1)
+        ref_eng2.submit(ref)
+        ref_eng2.drain()
+        assert target.generated == ref.generated
+
+    def test_stream_driven_load(self, engine_setup):
+        cfg, params = engine_setup
+        sim = nsa(preprocess(make_stream("sogouq", scale=0.005, seed=4)), 30)
+        q = StreamQueue(maxsize=64)
+        threading.Thread(target=Producer(sim, q, clock=VirtualClock()).run,
+                         daemon=True).start()
+        eng = ServingEngine(cfg, params, slots=4, max_len=48, eos_id=-1)
+        n = 0
+        for ss, reqs in stream_arrivals(q, cfg.vocab_size, prompt_len=4,
+                                        max_new_tokens=3,
+                                        max_requests_per_bucket=2):
+            for r in reqs:
+                eng.submit(r)
+                n += 1
+            eng.tick()
+        eng.drain()
+        assert n > 5
+        assert eng.metrics.finished == n
+        assert eng.metrics.summary()["p50_latency_s"] >= 0.0
