@@ -36,6 +36,33 @@ def run(csv: List[str]) -> None:
     dt_o = _t(lambda: ops.stream_sample_ref(t, mr, mult))
     csv.append(f"kernels/stream_sample_1M,{dt_k*1e6:.0f},oracle_us={dt_o*1e6:.0f}")
 
+    # mask compaction: 1M-record keep mask -> kept indices, one device pass
+    mask = rng.random(n) < (1.0 / mult)
+    dt_k = _t(lambda: ops.compact_mask(mask), reps=3)
+    dt_o = _t(lambda: np.flatnonzero(mask), reps=3)
+    csv.append(f"kernels/compact_1M,{dt_k*1e6:.0f},host_np_us={dt_o*1e6:.0f}")
+
+    # batched NSA: 64 concurrent device streams, one 2-D-grid dispatch vs
+    # 64 sequential single-stream dispatches. Full 64x256k on TPU; the
+    # interpret-mode CPU path runs a reduced per-stream length (the grid is
+    # interpreted step-by-step) — the derived column records the real shape.
+    S = 64
+    ns = 262_144 if ops.on_tpu() else 4_096
+    ts = [np.sort(rng.uniform(0, 86_400, ns)) for _ in range(S)]
+    dt_b = _t(lambda: ops.stream_sample_batched(ts, mr, mult), reps=1)
+
+    def _looped():
+        outs = [ops.stream_sample(t_s, mr, mult) for t_s in ts]
+        return outs[-1]
+
+    dt_l = _t(_looped, reps=1)
+    # canonical row name is the TPU shape; off-TPU runs append the actual
+    # executed shape so trend tooling never compares incommensurable sizes
+    row = "kernels/batched_nsa_64x256k" if ns == 262_144 \
+        else f"kernels/batched_nsa_64x256k@64x{ns}"
+    csv.append(f"{row},{dt_b*1e6:.0f},"
+               f"shape=64x{ns};dispatches=1;looped_{S}_dispatches_us={dt_l*1e6:.0f}")
+
     # bucket_hist
     ss = np.sort(rng.integers(0, mr, n)).astype(np.int32)
     dt_k = _t(lambda: ops.bucket_hist(ss, mr))

@@ -5,19 +5,38 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_network     -> Fig. 6   (bytes into the SPS, trend correlation)
   bench_efficiency  -> Fig. 7 / Table 4 + the >=24x headline (§6)
   bench_kernels     -> Pallas kernel micro-benchmarks
+
+Alongside the CSV, every module's rows are written machine-readable to
+``BENCH_<module>.json`` (set ``BENCH_OUT_DIR`` to redirect; default CWD) so
+the per-PR perf trajectory can be tracked by tooling instead of CSV scraping.
 """
 
+import json
+import os
 import sys
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
     from benchmarks import bench_efficiency, bench_kernels, bench_network, \
         bench_volatility
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
     csv = ["name,us_per_call,derived"]
     for mod in (bench_volatility, bench_network, bench_efficiency,
                 bench_kernels):
         print(f"# running {mod.__name__} ...", file=sys.stderr, flush=True)
+        start = len(csv)
         mod.run(csv)
+        suffix = mod.__name__.split(".")[-1].replace("bench_", "")
+        path = os.path.join(out_dir, f"BENCH_{suffix}.json")
+        with open(path, "w") as f:
+            json.dump([_parse_row(r) for r in csv[start:]], f, indent=2)
+        print(f"# wrote {path}", file=sys.stderr, flush=True)
     print("\n".join(csv))
 
 

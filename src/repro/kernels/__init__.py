@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 Paper hot-spots (bandwidth-bound scans over millions of records):
-- :mod:`repro.kernels.stream_sample` — fused NSA inner loop: Min-Max
-  normalize -> scale-stamp -> systematic keep mask (one HBM pass).
+- :mod:`repro.kernels.stream_sample` — fused NSA inner loop, batched over
+  S stacked streams in one 2-D-grid dispatch: Min-Max normalize ->
+  scale-stamp -> systematic keep mask (one HBM pass).
+- :mod:`repro.kernels.compact`       — mask compaction: tiled exclusive
+  prefix sum with an SMEM carry -> per-record write positions + total, so
+  kept-record indices materialize on device (no host round-trip).
 - :mod:`repro.kernels.bucket_hist`   — per-scale-stamp histogram via the
   TPU one-hot-matmul idiom (MXU-resident counting).
 - :mod:`repro.kernels.volatility`    — fused count moments (sum, sum-sq)

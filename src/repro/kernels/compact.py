@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: mask compaction via a tiled exclusive prefix sum.
+
+Turns a 0/1 keep mask into the write position of every record (``pos[i] =
+number of kept records before i``) plus the total kept count, in ONE
+sequential HBM pass: the TPU grid walks record tiles in order, each step
+computing the tile-local exclusive cumsum (lane-wise ``cumsum`` + row
+offsets) and adding the running carry held in SMEM scratch — the classic
+single-pass scan-with-carry, no second kernel launch and no host round-trip.
+
+The caller turns positions into gathered kept-record *indices* with one XLA
+scatter (``zeros.at[pos[kept]].set(iota)``, see :func:`repro.kernels.ops.
+compact_mask`) — TPUs have no fast in-kernel scatter, but a dense
+length-``n`` scatter with device-computed positions is a single additional
+bandwidth pass and keeps the whole NSA chain on device.
+
+Layout mirrors the other kernels: records padded to a multiple of the
+(8, 128) tile; padded entries must carry mask ``0``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE  # records per grid step
+
+
+def _kernel(mask_ref, pos_ref, total_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    m = mask_ref[...].astype(jnp.int32)              # (SUBLANE, LANE) 0/1
+    # tile-local exclusive cumsum in row-major record order:
+    # lane-wise inclusive scan, then per-row offsets from the row totals
+    row_incl = jnp.cumsum(m, axis=1)
+    row_tot = row_incl[:, -1:]
+    row_off = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+    excl = row_incl - m + row_off
+
+    carry = carry_ref[0]
+    pos_ref[...] = carry + excl
+    carry_ref[0] = carry + jnp.sum(m)
+    total_ref[0] = carry_ref[0]                      # last grid step wins
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_positions_pallas(mask: jnp.ndarray, *, interpret: bool = False):
+    """mask: (n,) int32 0/1, n % TILE == 0 (pad with 0).
+
+    Returns ``(pos int32 (n,), total int32 (1,))`` where ``pos[i]`` is the
+    exclusive prefix sum of the mask (the output slot of record ``i`` if it
+    is kept) and ``total`` the number of set mask entries.
+    """
+    n = mask.shape[0]
+    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    rows = n // LANE
+    m2 = mask.reshape(rows, LANE)
+    grid = (rows // SUBLANE,)
+    pos, total = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(m2)
+    return pos.reshape(n), total

@@ -16,13 +16,39 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.bucket_hist import LANE, TILE, bucket_hist_pallas
+from repro.kernels.compact import compact_positions_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.stream_sample import stream_sample_pallas
 from repro.kernels.volatility import volatility_pallas
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
+    """Single source of truth for the device-selection predicate."""
     return jax.default_backend() == "tpu"
+
+
+_on_tpu = on_tpu
+
+
+class PallasDomainError(ValueError):
+    """The inputs fall outside the Pallas kernels' exactness domain.
+
+    Raised by the ops wrappers *before* dispatch; ``nsa(backend="pallas")``
+    catches it and falls back to the numpy path, so callers only see it
+    when invoking the ops layer directly.
+    """
+
+
+class KeepRuleOverflow(PallasDomainError):
+    """The systematic keep rule ``(rank * k) % c`` would overflow int32.
+
+    The kernel (and its oracle) compute the Bresenham product in int32 —
+    the TPU-native width — which is exact only while ``(c - 1) * k < 2**31``
+    for every bucket. Streams with enormous single buckets and weak
+    compression (e.g. 100k identical timestamps at multiple ~3) violate
+    this; the wrappers refuse them rather than silently diverge from the
+    int64 numpy path, and ``nsa(backend="pallas")`` falls back to numpy.
+    """
 
 
 def _pad_to(x: jnp.ndarray, mult: int, value) -> Tuple[jnp.ndarray, int]:
@@ -34,58 +60,152 @@ def _pad_to(x: jnp.ndarray, mult: int, value) -> Tuple[jnp.ndarray, int]:
 
 
 # --------------------------------------------------------------------- NSA
+def _nsa_tables(t64: np.ndarray, max_range: int, multiple: float):
+    """Exact per-bucket tables + kernel inputs for one sorted stream.
+
+    Computes (rebased f32 timestamps, starts, counts, ktab, (t_min, 1/span))
+    where the tables come from the *float64 host formula* — the identical
+    expression ``(t - t_min) / span * max_range`` that
+    :func:`repro.streamsim.nsa.scale_stamps` floors — so the kernel's
+    +-1-snapped scale stamps are bit-identical to the numpy path. O(n)
+    vectorized host work for ``v`` plus O(max_range log n) searchsorted;
+    everything per-record then runs on device.
+    """
+    from repro.kernels.stream_sample import MAX_RANGE_LIMIT
+    if max_range > MAX_RANGE_LIMIT:
+        raise PallasDomainError(
+            f"max_range {max_range} exceeds {MAX_RANGE_LIMIT}: the +-1 "
+            "bucket snap no longer bounds the f32 normalize error; use the "
+            "numpy NSA path")
+    n = len(t64)
+    t_min, t_max = float(t64[0]), float(t64[-1])
+    span = t_max - t_min
+    if span <= 0.0:
+        # degenerate stream (all timestamps equal): everything is bucket 0,
+        # so bucket 0 spans [0, n) and every later bucket starts at n
+        starts = np.full(max_range, n, np.int32)
+        starts[0] = 0
+        inv_span = 0.0
+    else:
+        v = (t64 - t_min) / span * max_range
+        starts = np.searchsorted(v, np.arange(max_range)).astype(np.int32)
+        inv_span = 1.0 / span
+    counts = np.diff(np.append(starts, n)).astype(np.int32)
+    ktab = np.clip(np.rint(counts / multiple), 1, None).astype(np.int32)
+    prod = (counts.astype(np.int64) - 1).clip(0) * ktab.astype(np.int64)
+    if prod.max(initial=0) >= 2 ** 31:
+        raise KeepRuleOverflow(
+            f"bucket with count={counts[prod.argmax()]} and "
+            f"k={ktab[prod.argmax()]} overflows the int32 keep rule; "
+            "use the numpy NSA path for this stream")
+    t32 = (t64 - t_min).astype(np.float32)
+    return t32, starts, counts, ktab, (0.0, inv_span)
+
+
 def stream_sample(t: jnp.ndarray, max_range: int,
                   multiple: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused NSA inner loop on device.
+    """Fused NSA inner loop on device (single stream == batch of one).
 
     t must be sorted ascending. Returns (scale_stamp int32, keep bool), both
     length n. Mirrors repro.streamsim.nsa semantics exactly (keep =
     'systematic', multiple precomputed by the caller).
 
     Epoch-second timestamps (~1.5e9) quantize to ~128 s in float32, so the
-    wrapper re-bases to relative time in float64 *before* the cast — the
-    kernel then works at ~10 ms resolution over a day-long stream. Records
-    within float32-eps of a bucket edge may still bucket differently from the
-    float64 host path (≪0.1%); the oracle uses the identical f32 path so
-    kernel-vs-oracle is exact.
+    wrapper re-bases to relative time in float64 *before* the cast. The
+    per-bucket tables are computed with the exact float64 host formula and
+    the kernel snaps its f32 bucket guess to them, so the outputs are
+    bit-identical to the numpy NSA path — not merely allclose.
     """
-    t = np.asarray(t, np.float64)
-    t = jnp.asarray(t - t[0] if len(t) else t, jnp.float32)
-    n = t.shape[0]
+    t64 = np.asarray(t, np.float64)
+    n = len(t64)
     if n == 0:
         return jnp.zeros(0, jnp.int32), jnp.zeros(0, bool)
-    t_min = t[0]
-    span = jnp.maximum(t[-1] - t[0], 1e-9)
-    # per-bucket tables: O(max_range) via searchsorted on the sorted column
-    edges = t_min + span * jnp.arange(max_range + 1, dtype=jnp.float32) / max_range
-    starts_full = jnp.searchsorted(t, edges[:-1], side="left").astype(jnp.int32)
-    ends = jnp.searchsorted(t, edges[1:], side="left").astype(jnp.int32)
-    counts = (ends - starts_full).astype(jnp.int32)
-    # the clamp (record at t_max) folds into the last bucket
-    counts = counts.at[-1].add(n - ends[-1])
-    tp, n0 = _pad_to(t, TILE, jnp.inf)
+    t32, starts, counts, ktab, scalars = _nsa_tables(t64, max_range, multiple)
+    tp, n0 = _pad_to(jnp.asarray(t32), TILE, t32[-1])
     ss, keep = stream_sample_pallas(
-        tp, starts_full, counts, t_min, span,
-        jnp.float32(multiple), max_range,
+        tp[None, :], jnp.asarray(starts)[None, :],
+        jnp.asarray(counts)[None, :], jnp.asarray(ktab)[None, :],
+        jnp.asarray(scalars, jnp.float32)[None, :], max_range,
         interpret=not _on_tpu())
-    return ss[:n0], keep[:n0].astype(bool)
+    return ss[0, :n0], keep[0, :n0].astype(bool)
 
 
 def stream_sample_ref(t: jnp.ndarray, max_range: int, multiple: float):
     """Oracle with the same padding-free public signature."""
-    t = np.asarray(t, np.float64)
-    t = jnp.asarray(t - t[0] if len(t) else t, jnp.float32)
-    n = t.shape[0]
-    t_min = t[0]
-    span = jnp.maximum(t[-1] - t[0], 1e-9)
-    edges = t_min + span * jnp.arange(max_range + 1, dtype=jnp.float32) / max_range
-    starts_full = jnp.searchsorted(t, edges[:-1], side="left").astype(jnp.int32)
-    ends = jnp.searchsorted(t, edges[1:], side="left").astype(jnp.int32)
-    counts = (ends - starts_full).astype(jnp.int32)
-    counts = counts.at[-1].add(n - ends[-1])
-    ss, keep = ref.stream_sample_ref(t, starts_full, counts, t_min, span,
-                                     jnp.float32(multiple), max_range)
-    return ss, keep.astype(bool)
+    t64 = np.asarray(t, np.float64)
+    if len(t64) == 0:
+        return jnp.zeros(0, jnp.int32), jnp.zeros(0, bool)
+    t32, starts, counts, ktab, scalars = _nsa_tables(t64, max_range, multiple)
+    ss, keep = ref.stream_sample_ref(
+        jnp.asarray(t32)[None, :], jnp.asarray(starts)[None, :],
+        jnp.asarray(counts)[None, :], jnp.asarray(ktab)[None, :],
+        jnp.asarray(scalars, jnp.float32)[None, :], max_range)
+    return ss[0], keep[0].astype(bool)
+
+
+def stream_sample_batched(ts, max_range: int, multiples):
+    """Batched fused NSA inner loop: S streams, ONE kernel dispatch.
+
+    ts        : sequence of S sorted 1-D float64 timestamp arrays (ragged
+                lengths allowed) or an (S, N) array.
+    multiples : per-stream multiple (scalar broadcasts).
+
+    Pads every stream to the common TILE-aligned length and runs the 2-D-grid
+    kernel once — replacing S sequential :func:`stream_sample` dispatches.
+    Returns (scale_stamp int32 (S, N), keep bool (S, N), lengths int (S,));
+    padded tail entries have keep == False.
+    """
+    ts = [np.asarray(t, np.float64) for t in ts]
+    S = len(ts)
+    if S == 0:
+        raise ValueError("need at least one stream")
+    lengths = np.array([len(t) for t in ts])
+    if np.any(lengths == 0):
+        raise ValueError("batched path requires non-empty streams")
+    mults = np.broadcast_to(np.asarray(multiples, np.float64), (S,))
+    N = int(-(-lengths.max() // TILE) * TILE)
+    t_b = np.empty((S, N), np.float32)
+    starts_b = np.empty((S, max_range), np.int32)
+    counts_b = np.empty((S, max_range), np.int32)
+    k_b = np.empty((S, max_range), np.int32)
+    scal_b = np.empty((S, 2), np.float32)
+    for s, t64 in enumerate(ts):
+        t32, starts, counts, ktab, scalars = _nsa_tables(
+            t64, max_range, float(mults[s]))
+        t_b[s, :len(t32)] = t32
+        t_b[s, len(t32):] = t32[-1]          # pad into the last bucket
+        starts_b[s], counts_b[s], k_b[s] = starts, counts, ktab
+        scal_b[s] = scalars
+    ss, keep = stream_sample_pallas(
+        jnp.asarray(t_b), jnp.asarray(starts_b), jnp.asarray(counts_b),
+        jnp.asarray(k_b), jnp.asarray(scal_b), max_range,
+        interpret=not _on_tpu())
+    valid = jnp.arange(N)[None, :] < jnp.asarray(lengths)[:, None]
+    return ss, keep.astype(bool) & valid, lengths
+
+
+# -------------------------------------------------------------- compaction
+def compact_mask(mask: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Kept-record indices from a boolean keep mask, on device.
+
+    Chains the Pallas scan-with-carry kernel (exclusive prefix sum over the
+    mask -> per-record write position + total) with one XLA scatter that
+    lands each kept record's index in its slot — no host round-trip over the
+    record axis.
+
+    Returns ``(idx int32 (n,), total int)``: ``idx[:total]`` are the indices
+    of the set entries in ascending order; ``idx[total:]`` are ``n``.
+    """
+    mask = jnp.asarray(mask)
+    n = mask.shape[0]
+    if n == 0:
+        return jnp.zeros(0, jnp.int32), 0
+    mp, _ = _pad_to(mask.astype(jnp.int32), TILE, 0)
+    pos, total = compact_positions_pallas(mp, interpret=not _on_tpu())
+    tgt = jnp.where(mask.astype(bool), pos[:n], n)
+    idx = jnp.full((n,), n, jnp.int32).at[tgt].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return idx, int(total[0])
 
 
 # --------------------------------------------------------------- histogram
@@ -135,6 +255,7 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 __all__ = [
-    "bucket_hist", "flash_decode", "stream_sample", "stream_sample_ref",
-    "volatility_moments", "volatility_stats",
+    "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
+    "flash_decode", "on_tpu", "stream_sample", "stream_sample_batched",
+    "stream_sample_ref", "volatility_moments", "volatility_stats",
 ]

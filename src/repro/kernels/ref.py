@@ -15,25 +15,47 @@ def scale_stamp_ref(t: jnp.ndarray, t_min: jnp.ndarray, span: jnp.ndarray,
 
 
 def stream_sample_ref(t: jnp.ndarray, starts: jnp.ndarray,
-                      counts: jnp.ndarray, t_min: jnp.ndarray,
-                      span: jnp.ndarray, multiple: jnp.ndarray,
+                      counts: jnp.ndarray, ktab: jnp.ndarray,
+                      scalars: jnp.ndarray,
                       max_range: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused NSA inner loop: (scale_stamp, systematic keep mask).
+    """Batched fused NSA inner loop: (scale_stamp, systematic keep mask).
 
-    ``starts``/``counts`` are the per-bucket offsets/sizes of the (sorted)
-    timestamp array. Keep rule (Bresenham-even, k of c records survive):
-        k = clip(round(c / multiple), 1)
+    Same contract as ``stream_sample_pallas``: t (S, N) f32 sorted per-stream
+    timestamps; ``starts``/``counts``/``ktab`` the exact (S, max_range)
+    per-bucket tables; ``scalars`` (S, 2) rows of (t_min, 1/span). The f32
+    bucket guess is snapped by +-1 to the bucket containing the record index
+    (the tables are exact, so the snapped stamp matches the f64 host path).
+    Keep rule (Bresenham-even, k of c records survive):
         keep(rank) = (rank * k) mod c < k
     """
-    n = t.shape[0]
-    ss = scale_stamp_ref(t, t_min, span, max_range)
-    start = starts[ss]
-    c = counts[ss]
-    rank = jnp.arange(n, dtype=jnp.int32) - start
-    k = jnp.clip(jnp.rint(c.astype(jnp.float32) / multiple), 1, None)
-    k = k.astype(jnp.int32)
+    S, n = t.shape
+    t_min = scalars[:, 0:1]
+    inv_span = scalars[:, 1:2]
+    g = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
+    g = jnp.clip(g, 0, max_range - 1)
+    gidx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (S, n))
+    s_g = jnp.take_along_axis(starts, g, axis=1)
+    c_g = jnp.take_along_axis(counts, g, axis=1)
+    g = g + (gidx >= s_g + c_g).astype(jnp.int32) \
+          - (gidx < s_g).astype(jnp.int32)
+    ss = jnp.clip(g, 0, max_range - 1)
+    start = jnp.take_along_axis(starts, ss, axis=1)
+    c = jnp.take_along_axis(counts, ss, axis=1)
+    k = jnp.take_along_axis(ktab, ss, axis=1)
+    rank = gidx - start
     keep = (rank * k) % jnp.maximum(c, 1) < k
     return ss, keep.astype(jnp.int32)
+
+
+def compact_ref(mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask-compaction oracle: exclusive prefix sum + total kept count.
+
+    mask: (n,) int32 0/1. Returns (pos int32 (n,), total int32 (1,)) with
+    ``pos[i]`` = number of set entries strictly before ``i``.
+    """
+    m = mask.astype(jnp.int32)
+    incl = jnp.cumsum(m)
+    return (incl - m).astype(jnp.int32), incl[-1:].astype(jnp.int32)
 
 
 def bucket_hist_ref(ss: jnp.ndarray, max_range: int) -> jnp.ndarray:

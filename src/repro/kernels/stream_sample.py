@@ -1,14 +1,34 @@
-"""Pallas TPU kernel: fused NSA inner loop (normalize -> bucket -> keep mask).
+"""Pallas TPU kernel: fused, batched NSA inner loop (normalize -> bucket ->
+keep mask) over ``(S, N)`` stacked device streams.
 
-One HBM pass over the timestamp column produces both the scale stamp and the
-systematic-sampling keep mask. The per-bucket offset/size tables (starts,
-counts; ``max_range`` <= 3600 entries, <= 14 KiB each) ride along in VMEM for
-every tile, so the in-bucket rank needs no second pass and no host round-trip
-— this is the kernel-level fusion of Algorithm 1's two loops.
+One ``pallas_call`` with a 2-D grid ``(stream, record-tile)`` replaces S
+sequential dispatches: grid step ``(s, i)`` normalizes an (8, 128)-record
+tile of stream ``s`` while that stream's per-bucket tables (starts, counts,
+per-bucket keep budget ``k``; ``max_range`` <= 3600 entries, <= 14 KiB each)
+and scalars (t_min, 1/span) ride along in VMEM. The single-stream path is
+just S == 1.
+
+Exactness: the float32 normalize can land a record one bucket off the
+float64 host answer near an edge, so the kernel *snaps*: the wrapper ships
+per-bucket ``starts``/``counts`` tables computed with the host's exact
+float64 formula, and the kernel corrects its f32 bucket guess by +-1 so that
+``starts[b] <= gidx < starts[b] + counts[b]`` — because the stream is
+sorted, the tables fully determine the true bucket, and the f32 guess is
+provably within one bucket of it for ``max_range < 2**20``. Result: the
+kernel's scale stamps and keep mask are bit-identical to the numpy NSA, not
+just allclose.
+
+The per-bucket keep budget ``k = clip(round(count / multiple), 1)`` is also
+precomputed host-side in float64 (an O(max_range) table), removing both the
+per-record division and any f32 rounding drift from the kernel.
+
+Domain: the keep rule's ``rank * k`` product is int32 (the TPU-native
+width), exact only while ``(count - 1) * k < 2**31`` per bucket; the ops
+wrapper raises :class:`repro.kernels.ops.KeepRuleOverflow` outside that
+domain and ``nsa(backend="pallas")`` falls back to numpy.
 
 Layout: the wrapper pads the record axis to a multiple of the tile and
-reshapes to (rows, 128) so the lane dimension is hardware-native; each grid
-step processes an (8, 128)-record tile from VMEM.
+reshapes to (S, rows, 128) so the lane dimension is hardware-native.
 """
 
 from __future__ import annotations
@@ -23,75 +43,90 @@ LANE = 128
 SUBLANE = 8
 TILE = LANE * SUBLANE  # records per grid step
 
+# the +-1 snap correction is only guaranteed while the f32 normalize error
+# stays under one bucket: ~4 * max_range * 2^-24 < 1
+MAX_RANGE_LIMIT = 1 << 20
 
-def _kernel(t_ref, starts_ref, counts_ref, scalar_ref, ss_ref, keep_ref,
-            *, max_range: int):
-    i = pl.program_id(0)
-    t = t_ref[...].astype(jnp.float32)          # (SUBLANE, LANE)
-    t_min = scalar_ref[0]
-    inv_span = scalar_ref[1]                     # 1/span, precomputed
-    multiple = scalar_ref[2]
+
+def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
+            keep_ref, *, max_range: int):
+    i = pl.program_id(1)
+    t = t_ref[0].astype(jnp.float32)             # (SUBLANE, LANE)
+    t_min = scalar_ref[0, 0]
+    inv_span = scalar_ref[0, 1]                  # 1/span, precomputed
+    starts = starts_ref[0]                       # (max_range,) int32
+    counts = counts_ref[0]
+    ktab = k_ref[0]
 
     # --- normalize: paper formula (1), floored to the simulated second ---
-    ss = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
-    ss = jnp.clip(ss, 0, max_range - 1)
-
-    # --- in-bucket rank via VMEM table gather ---
-    starts = starts_ref[...]                     # (max_range,) int32
-    counts = counts_ref[...]
-    start = jnp.take(starts, ss, axis=0)
-    c = jnp.take(counts, ss, axis=0)
+    g = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
+    g = jnp.clip(g, 0, max_range - 1)
 
     base = i * TILE
     row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 1)
-    gidx = base + row * LANE + col               # global record index
-    rank = gidx - start
+    gidx = base + row * LANE + col               # per-stream record index
+
+    # --- snap the f32 guess to the bucket that actually contains gidx ---
+    s_g = jnp.take(starts, g, axis=0)
+    c_g = jnp.take(counts, g, axis=0)
+    g = g + (gidx >= s_g + c_g).astype(jnp.int32) \
+          - (gidx < s_g).astype(jnp.int32)
+    ss = jnp.clip(g, 0, max_range - 1)
 
     # --- systematic keep: k of c survive, Bresenham-even ---
-    k = jnp.clip(jnp.rint(c.astype(jnp.float32) / multiple), 1, None)
-    k = k.astype(jnp.int32)
+    start = jnp.take(starts, ss, axis=0)
+    c = jnp.take(counts, ss, axis=0)
+    k = jnp.take(ktab, ss, axis=0)
+    rank = gidx - start
     keep = (rank * k) % jnp.maximum(c, 1) < k
 
-    ss_ref[...] = ss
-    keep_ref[...] = keep.astype(jnp.int32)
+    ss_ref[0] = ss
+    keep_ref[0] = keep.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("max_range", "interpret"))
 def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
-                         counts: jnp.ndarray, t_min: jnp.ndarray,
-                         span: jnp.ndarray, multiple: jnp.ndarray,
-                         max_range: int, *, interpret: bool = False):
-    """t: (n,) float32 sorted timestamps (pre-padded to TILE multiple with
-    +inf -> clipped to last bucket, mask discarded by wrapper).
-    Returns (scale_stamp int32 (n,), keep int32 (n,))."""
-    n = t.shape[0]
+                         counts: jnp.ndarray, ktab: jnp.ndarray,
+                         scalars: jnp.ndarray, max_range: int, *,
+                         interpret: bool = False):
+    """Batched fused NSA inner loop.
+
+    t       : (S, N) float32 per-stream rebased timestamps, sorted along the
+              record axis, N % TILE == 0 (pad tails with any finite value —
+              padded keep bits are garbage; the wrapper masks by length).
+    starts  : (S, max_range) int32 exact per-bucket start offsets.
+    counts  : (S, max_range) int32 exact per-bucket sizes.
+    ktab    : (S, max_range) int32 per-bucket keep budgets.
+    scalars : (S, 2) float32 rows of (t_min, 1/span).
+
+    Returns (scale_stamp int32 (S, N), keep int32 (S, N)).
+    """
+    S, n = t.shape
     assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert max_range <= MAX_RANGE_LIMIT, \
+        f"max_range {max_range} too large for the +-1 bucket snap"
     rows = n // LANE
-    t2 = t.reshape(rows, LANE)
-    scalars = jnp.stack([
-        t_min.astype(jnp.float32),
-        (1.0 / span).astype(jnp.float32),
-        multiple.astype(jnp.float32),
-    ])
-    grid = (rows // SUBLANE,)
+    t3 = t.reshape(S, rows, LANE)
+    grid = (S, rows // SUBLANE)
     ss, keep = pl.pallas_call(
         functools.partial(_kernel, max_range=max_range),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),   # timestamps
-            pl.BlockSpec((max_range,), lambda i: (0,)),        # starts (whole)
-            pl.BlockSpec((max_range,), lambda i: (0,)),        # counts (whole)
-            pl.BlockSpec((3,), lambda i: (0,)),                # scalars
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, 2), lambda s, i: (s, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
-            jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),
         ],
         interpret=interpret,
-    )(t2, starts, counts, scalars)
-    return ss.reshape(n), keep.reshape(n)
+    )(t3, starts, counts, ktab, scalars)
+    return ss.reshape(S, n), keep.reshape(S, n)

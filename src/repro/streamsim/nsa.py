@@ -35,18 +35,48 @@ Implementations
 - :func:`nsa_paper` — faithful per-record Python loop, the paper-written
   algorithm (the §Perf baseline; O(n) interpreted).
 - :func:`nsa` — vectorized numpy (beyond-paper; same output bit-for-bit).
-- ``repro.kernels.ops.stream_sample`` — Pallas TPU kernel of the fused
-  bucket+mask hot loop (validated against :func:`nsa` outputs).
+- :func:`nsa` with ``backend="pallas"`` — the device-resident fast path:
+  normalize + keep mask (``ops.stream_sample``) and mask compaction
+  (``ops.compact_mask``) run on device; only the O(max_range) per-bucket
+  tables and the final column gather touch the host. Bit-identical to the
+  numpy path (the kernel snaps its f32 buckets to exact f64 tables).
+- :func:`nsa_batched` — S streams in ONE kernel dispatch
+  (``ops.stream_sample_batched``) instead of S sequential ones.
+
+Backend selection rules
+-----------------------
+``backend`` on :func:`nsa` / :func:`nsa_batched` (and the passthrough knob
+on ``Controller.simulate``/``Controller.run``) accepts:
+
+- ``"auto"``  — the device path when JAX reports a TPU backend, else numpy.
+  Off-TPU the Pallas kernels would run in ``interpret`` mode, which is
+  correct but slower than vectorized numpy — so auto never picks it on CPU.
+- ``"pallas"`` — force the device path (interpret mode off-TPU; this is what
+  tests and CPU benchmarks use).
+- ``"numpy"`` — force the host path.
+
+Every backend produces bit-identical output for the same arguments.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Dict
 
 import numpy as np
 
 from repro.streamsim.preprocess import Stream
+
+BACKENDS = ("auto", "numpy", "pallas")
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        from repro.kernels.ops import on_tpu
+        return "pallas" if on_tpu() else "numpy"
+    return backend
 
 
 def scale_stamps(t: np.ndarray, max_range: int) -> np.ndarray:
@@ -107,17 +137,30 @@ def systematic_keep_mask(ss: np.ndarray, max_range: int, multiple: float,
 
 
 def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
-        multiple_mode: str = "time") -> Stream:
+        multiple_mode: str = "time", backend: str = "numpy") -> Stream:
     """Vectorized NSA (Algorithm 1): normalize + sample -> simulated stream Ds.
 
     Returns a new :class:`Stream` whose ``scale_stamp`` is filled and whose
     records are the systematic sample; per-second volatility statistics match
     the original stream's (paper §5.2).
+
+    ``backend`` selects the implementation (see the module docstring):
+    ``"numpy"`` host path, ``"pallas"`` device-resident path (bit-identical
+    output), ``"auto"`` = pallas on TPU else numpy. The device kernel only
+    implements the systematic keep rule; ``keep="first"`` always takes the
+    numpy path.
     """
     if max_range <= 0:
         raise ValueError("max_range must be positive")
-    ss = scale_stamps(stream.t, max_range)
     m = _multiple(len(stream), stream.time_range, max_range, multiple_mode)
+    if (_resolve_backend(backend) == "pallas" and keep == "systematic"
+            and len(stream) > 0):
+        from repro.kernels.ops import PallasDomainError
+        try:
+            return _nsa_pallas(stream, max_range, m)
+        except PallasDomainError:
+            pass  # stream outside the kernel's exactness domain
+    ss = scale_stamps(stream.t, max_range)
     mask = systematic_keep_mask(ss, max_range, m, keep=keep)
     return Stream(
         name=stream.name,
@@ -125,6 +168,78 @@ def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
         payload={k: v[mask] for k, v in stream.payload.items()},
         scale_stamp=ss[mask],
     )
+
+
+def _nsa_pallas(stream: Stream, max_range: int, multiple: float) -> Stream:
+    """Device-resident NSA: normalize -> mask -> compact -> gather.
+
+    The per-record work (bucketing, keep mask, prefix-sum compaction, index
+    scatter) runs in two fused Pallas dispatches plus one XLA scatter; the
+    host only builds the O(max_range) exact tables and fancy-indexes the
+    payload columns (which may be float64/strings — not device-representable
+    without loss) by the device-computed kept indices.
+    """
+    from repro.kernels import ops
+
+    ss_dev, keep_dev = ops.stream_sample(stream.t, max_range, multiple)
+    return _compact_gather(stream, ss_dev, keep_dev)
+
+
+def _compact_gather(stream: Stream, ss_dev, keep_dev) -> Stream:
+    """Shared tail of the device path: compact the keep mask to indices on
+    device, gather scale stamps there (delivered as host int64 — the numpy
+    path's dtype), and fancy-index the host columns once."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    idx_dev, total = ops.compact_mask(keep_dev)
+    ss_kept = np.asarray(
+        jnp.take(ss_dev, idx_dev[:total], mode="clip")).astype(np.int64)
+    idx = np.asarray(idx_dev[:total])
+    return Stream(
+        name=stream.name,
+        t=stream.t[idx],
+        payload={k: v[idx] for k, v in stream.payload.items()},
+        scale_stamp=ss_kept,
+    )
+
+
+def nsa_batched(streams: Dict[str, Stream], max_range: int, *,
+                multiple_mode: str = "time",
+                backend: str = "auto") -> Dict[str, Stream]:
+    """NSA over many concurrent device streams — the IoT-realistic shape.
+
+    On the pallas backend all S keep masks come from ONE batched kernel
+    dispatch (2-D grid over streams x record tiles) instead of S sequential
+    ones; each stream is then compacted and gathered as in :func:`nsa`.
+    Off-TPU ``"auto"`` falls back to per-stream numpy. Output is
+    bit-identical to ``{k: nsa(s, max_range)}`` for every backend.
+    """
+    if max_range <= 0:
+        raise ValueError("max_range must be positive")
+    resolved = _resolve_backend(backend)
+    if resolved != "pallas" or not streams or \
+            any(len(s) == 0 for s in streams.values()):
+        return {name: nsa(s, max_range, multiple_mode=multiple_mode,
+                          backend="numpy")
+                for name, s in streams.items()}
+    from repro.kernels import ops
+
+    names = list(streams)
+    ts = [streams[n].t for n in names]
+    mults = [_multiple(len(streams[n]), streams[n].time_range, max_range,
+                       multiple_mode) for n in names]
+    try:
+        ss_b, keep_b, lengths = ops.stream_sample_batched(ts, max_range,
+                                                          mults)
+    except ops.PallasDomainError:
+        # some stream falls outside the kernel's exactness domain
+        return {name: nsa(s, max_range, multiple_mode=multiple_mode,
+                          backend="numpy")
+                for name, s in streams.items()}
+    return {name: _compact_gather(streams[name], ss_b[s],
+                                  keep_b[s, :lengths[s]])
+            for s, name in enumerate(names)}
 
 
 def nsa_paper(stream: Stream, max_range: int, *, keep: str = "systematic",

@@ -57,20 +57,23 @@ class RealClock:
 
 
 def _group_by_scale_stamp(stream: Stream):
-    """Pre-slice the stream into per-bucket views (sorted by construction)."""
+    """Pre-slice the stream into per-bucket views (sorted by construction).
+
+    ``np.unique(ss, return_index=True)`` on the non-decreasing stamps gives
+    every non-empty bucket's first offset in one vectorized pass, so host
+    work is O(n + #non-empty buckets) instead of a Python loop over the full
+    ``max_range`` (which dominates for sparse simulated streams).
+    """
     ss = stream.scale_stamp
     if ss is None:
         raise ValueError("producer needs a simulated stream (run NSA first)")
     if len(ss) == 0:
         return {}, 0
-    max_range = int(ss.max()) + 1
-    counts = np.bincount(ss, minlength=max_range)
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    slices = {}
-    for b in range(max_range):
-        if counts[b] > 0:
-            sl = slice(int(starts[b]), int(starts[b] + counts[b]))
-            slices[b] = sl
+    max_range = int(ss[-1]) + 1
+    buckets, first = np.unique(ss, return_index=True)
+    bounds = np.append(first, len(ss))
+    slices = {int(b): slice(int(lo), int(hi))
+              for b, lo, hi in zip(buckets, bounds[:-1], bounds[1:])}
     return slices, max_range
 
 

@@ -28,15 +28,17 @@ class TestStreamSample:
         np.testing.assert_array_equal(np.asarray(ss_k), np.asarray(ss_o))
         np.testing.assert_array_equal(np.asarray(keep_k), np.asarray(keep_o))
 
-    def test_matches_host_nsa(self):
+    def test_matches_host_nsa_exactly(self):
+        # the +-1 bucket snap against exact f64 tables makes the kernel
+        # bit-identical to the host path, not merely close
         from repro.streamsim.nsa import scale_stamps, systematic_keep_mask
         t = _sorted_times(20_000, 86_400.0, seed=1)
         mr, mult = 300, 86_400.0 / 300
         ss_np = scale_stamps(t, mr)
         keep_np = systematic_keep_mask(ss_np, mr, mult)
         ss_k, keep_k = ops.stream_sample(t, mr, mult)
-        assert np.mean(np.asarray(ss_k) == ss_np) > 0.999
-        assert np.mean(np.asarray(keep_k) == keep_np) > 0.999
+        np.testing.assert_array_equal(np.asarray(ss_k), ss_np)
+        np.testing.assert_array_equal(np.asarray(keep_k), keep_np)
 
     @pytest.mark.parametrize("dtype", [np.float64, np.float32])
     def test_dtypes(self, dtype):
@@ -44,6 +46,109 @@ class TestStreamSample:
         ss, keep = ops.stream_sample(t, 50, 20.0)
         assert ss.dtype == jnp.int32
         assert int(keep.sum()) >= 50 // 2
+
+    def test_keep_rule_overflow_refused(self):
+        # (c-1)*k >= 2**31 would wrap the int32 Bresenham product and
+        # silently diverge from the int64 numpy path — must raise instead
+        t = np.full(100_000, 5.0)
+        with pytest.raises(ops.KeepRuleOverflow):
+            ops.stream_sample(t, 600, 3.0)
+        with pytest.raises(ops.KeepRuleOverflow):
+            ops.stream_sample_batched([t], 600, 3.0)
+
+    def test_max_range_beyond_snap_limit_refused(self):
+        # beyond the +-1 snap guarantee the wrapper must refuse (not assert)
+        from repro.kernels.stream_sample import MAX_RANGE_LIMIT
+        t = np.arange(100, dtype=np.float64)
+        with pytest.raises(ops.PallasDomainError):
+            ops.stream_sample(t, MAX_RANGE_LIMIT + 1, 2.0)
+        # ...and nsa() falls back to numpy instead of surfacing the error
+        from repro.streamsim.nsa import nsa as nsa_fn
+        from repro.streamsim.preprocess import Stream
+        s = Stream("x", t, {"v": np.arange(100)})
+        a = nsa_fn(s, MAX_RANGE_LIMIT + 1, backend="pallas")
+        b = nsa_fn(s, MAX_RANGE_LIMIT + 1, backend="numpy")
+        np.testing.assert_array_equal(a.t, b.t)
+
+    @pytest.mark.parametrize("n", [1, 7, 500])
+    def test_zero_span_stream(self, n):
+        # all-equal timestamps: host path puts everything in bucket 0; the
+        # degenerate table branch must agree (regression: records used to
+        # land in bucket 1 via the snap)
+        from repro.streamsim.nsa import scale_stamps, systematic_keep_mask
+        t = np.full(n, 1234.5)
+        ss, keep = ops.stream_sample(t, 600, 144.0)
+        np.testing.assert_array_equal(np.asarray(ss), scale_stamps(t, 600))
+        np.testing.assert_array_equal(
+            np.asarray(keep), systematic_keep_mask(np.zeros(n, np.int64),
+                                                   600, 144.0))
+
+
+class TestStreamSampleBatched:
+    @pytest.mark.parametrize("lengths", [
+        (256, 256, 256),          # uniform
+        (100, 5000, 1237),        # ragged + unaligned tails
+        (TILE, 1, 3 * TILE + 7),  # single-record stream + exact tile
+    ])
+    def test_batched_equals_looped(self, lengths):
+        # one 2-D-grid dispatch == S sequential single-stream dispatches
+        mr = 60
+        ts = [_sorted_times(n, 86_400.0, seed=90 + i) if n > 1
+              else np.array([float(i)]) for i, n in enumerate(lengths)]
+        mults = [86_400.0 / mr * (1 + 0.5 * i) for i in range(len(ts))]
+        ss_b, keep_b, lens = ops.stream_sample_batched(ts, mr, mults)
+        for s, t in enumerate(ts):
+            ss_1, keep_1 = ops.stream_sample(t, mr, mults[s])
+            n = lens[s]
+            np.testing.assert_array_equal(np.asarray(ss_b[s, :n]),
+                                          np.asarray(ss_1))
+            np.testing.assert_array_equal(np.asarray(keep_b[s, :n]),
+                                          np.asarray(keep_1))
+            assert not np.asarray(keep_b[s, n:]).any(), "padded tail kept"
+
+    def test_scalar_multiple_broadcasts(self):
+        ts = [_sorted_times(500, 3600.0, seed=5) for _ in range(2)]
+        ss_b, keep_b, _ = ops.stream_sample_batched(ts, 30, 120.0)
+        assert ss_b.shape == keep_b.shape == (2, TILE)
+
+    def test_empty_stream_rejected(self):
+        with pytest.raises(ValueError):
+            ops.stream_sample_batched([np.zeros(0)], 10, 1.0)
+
+
+class TestCompact:
+    @pytest.mark.parametrize("n", [1, 100, TILE, 4 * TILE, 10_000])
+    @pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+    def test_matches_oracle_and_nonzero(self, n, density):
+        rng = np.random.default_rng(n + int(density * 7))
+        mask = (rng.random(n) < density)
+        if density == 1.0:
+            mask[:] = True          # all kept
+        idx, total = ops.compact_mask(mask)
+        exp = np.flatnonzero(mask)
+        assert total == len(exp)
+        np.testing.assert_array_equal(np.asarray(idx[:total]), exp)
+        assert np.all(np.asarray(idx[total:]) == n), "sentinel tail"
+        # positions agree with the pure-jnp oracle
+        from repro.kernels.compact import compact_positions_pallas
+        pad = (-n) % TILE
+        mp = jnp.asarray(np.concatenate([mask, np.zeros(pad, bool)]),
+                         jnp.int32)
+        pos_k, tot_k = compact_positions_pallas(mp, interpret=True)
+        pos_o, tot_o = ref.compact_ref(mp)
+        np.testing.assert_array_equal(np.asarray(pos_k), np.asarray(pos_o))
+        assert int(tot_k[0]) == int(tot_o[0]) == total
+
+    def test_bool_and_int_masks(self):
+        m = np.array([1, 0, 1, 1, 0], np.int64)
+        idx_i, tot_i = ops.compact_mask(m)
+        idx_b, tot_b = ops.compact_mask(m.astype(bool))
+        assert tot_i == tot_b == 3
+        np.testing.assert_array_equal(np.asarray(idx_i), np.asarray(idx_b))
+
+    def test_empty(self):
+        idx, total = ops.compact_mask(np.zeros(0, bool))
+        assert total == 0 and idx.shape == (0,)
 
 
 class TestBucketHist:

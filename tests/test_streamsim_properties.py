@@ -1,0 +1,76 @@
+"""Property-based NSA tests (hypothesis). Skipped wholesale when hypothesis
+is not installed (``pip install -r requirements-dev.txt``); the deterministic
+suite in ``test_streamsim.py`` runs regardless."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.streamsim import nsa, nsa_paper
+from repro.streamsim.nsa import systematic_keep_mask
+from repro.streamsim.preprocess import Stream
+
+
+@st.composite
+def sorted_timestamps(draw):
+    n = draw(st.integers(min_value=2, max_value=400))
+    deltas = draw(st.lists(st.floats(0.0, 50.0, allow_nan=False),
+                           min_size=n, max_size=n))
+    t0 = draw(st.floats(0, 1e9, allow_nan=False))
+    t = np.cumsum(np.asarray(deltas, np.float64)) + t0
+    return t
+
+
+class TestNSAProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(t=sorted_timestamps(), max_range=st.integers(2, 200))
+    def test_invariants(self, t, max_range):
+        s = Stream("h", t, {"x": np.arange(len(t))})
+        d = nsa(s, max_range)
+        # 1. output is a subsequence (order + subset)
+        assert np.all(np.diff(d.t) >= 0)
+        xs = d.payload["x"]
+        assert np.all(np.diff(xs) > 0)
+        # 2. scale stamps bounded + non-decreasing
+        if len(d):
+            assert d.scale_stamp.min() >= 0
+            assert d.scale_stamp.max() < max_range
+            assert np.all(np.diff(d.scale_stamp) >= 0)
+        # 3. never drops everything, never grows
+        assert 1 <= len(d) <= len(s)
+        # 4. deterministic
+        d2 = nsa(s, max_range)
+        assert np.array_equal(d.t, d2.t)
+
+    @settings(max_examples=30, deadline=None)
+    @given(t=sorted_timestamps(), max_range=st.integers(2, 100))
+    def test_paper_loop_agrees(self, t, max_range):
+        s = Stream("h", t, {"x": np.arange(len(t))})
+        a, b = nsa(s, max_range), nsa_paper(s, max_range)
+        assert np.array_equal(a.t, b.t)
+
+    @settings(max_examples=10, deadline=None)
+    @given(t=sorted_timestamps(), max_range=st.sampled_from([3, 60, 600]))
+    def test_pallas_backend_agrees(self, t, max_range):
+        s = Stream("h", t, {"x": np.arange(len(t))})
+        a = nsa(s, max_range, backend="pallas")
+        b = nsa(s, max_range, backend="numpy")
+        assert np.array_equal(a.t, b.t)
+        assert np.array_equal(a.scale_stamp, b.scale_stamp)
+
+    @settings(max_examples=30, deadline=None)
+    @given(counts=st.lists(st.integers(0, 50), min_size=1, max_size=60),
+           mult=st.floats(1.0, 40.0))
+    def test_keep_mask_counts(self, counts, mult):
+        # per bucket with c records, exactly clip(round(c/mult),1) survive
+        ss = np.repeat(np.arange(len(counts)), counts)
+        mask = systematic_keep_mask(ss, len(counts), mult)
+        kept = np.bincount(ss[mask], minlength=len(counts))
+        for b, c in enumerate(counts):
+            if c:
+                assert kept[b] == max(int(round(c / mult)), 1)
+            else:
+                assert kept[b] == 0
