@@ -10,6 +10,7 @@ Two measurements per (dataset, max_range):
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -19,6 +20,9 @@ from repro.streamsim.nsa import compression_factor
 TIME_RANGES = (3600, 3000, 2400, 1800, 1200, 600)  # paper Table 4 order
 SCALE = {"sogouq": 1.0, "traffic": 1.0, "userbehavior": 0.25}
 PAPER_LOOP_SCALE = 0.02  # per-record Python loops need a smaller stream
+if bool(int(os.environ.get("BENCH_QUICK", "0"))):
+    SCALE = {k: 0.01 for k in SCALE}
+    PAPER_LOOP_SCALE = 0.002
 
 
 def run(csv: List[str]) -> None:

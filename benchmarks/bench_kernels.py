@@ -5,6 +5,7 @@ end-to-end NSA device path vs host numpy.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -13,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
 
 
 def _t(fn, *args, reps=5):
@@ -28,26 +31,31 @@ def _t(fn, *args, reps=5):
 def run(csv: List[str]) -> None:
     rng = np.random.default_rng(0)
 
-    # stream_sample: 1M records into 600 buckets
-    n, mr = 1_000_000, 600
+    # stream_sample: 1M records into 600 buckets (quick mode runs a reduced
+    # record count; the name suffix records the executed shape so trend
+    # tooling never compares incommensurable sizes)
+    n, mr = (65_536, 600) if QUICK else (1_000_000, 600)
+    tag = "" if n == 1_000_000 else f"@{n}"
     t = np.sort(rng.uniform(0, 86_400, n))
     mult = 86_400 / mr
     dt_k = _t(lambda: ops.stream_sample(t, mr, mult))
     dt_o = _t(lambda: ops.stream_sample_ref(t, mr, mult))
-    csv.append(f"kernels/stream_sample_1M,{dt_k*1e6:.0f},oracle_us={dt_o*1e6:.0f}")
+    csv.append(f"kernels/stream_sample_1M{tag},{dt_k*1e6:.0f},"
+               f"oracle_us={dt_o*1e6:.0f}")
 
     # mask compaction: 1M-record keep mask -> kept indices, one device pass
     mask = rng.random(n) < (1.0 / mult)
     dt_k = _t(lambda: ops.compact_mask(mask), reps=3)
     dt_o = _t(lambda: np.flatnonzero(mask), reps=3)
-    csv.append(f"kernels/compact_1M,{dt_k*1e6:.0f},host_np_us={dt_o*1e6:.0f}")
+    csv.append(f"kernels/compact_1M{tag},{dt_k*1e6:.0f},"
+               f"host_np_us={dt_o*1e6:.0f}")
 
     # batched NSA: 64 concurrent device streams, one 2-D-grid dispatch vs
     # 64 sequential single-stream dispatches. Full 64x256k on TPU; the
     # interpret-mode CPU path runs a reduced per-stream length (the grid is
     # interpreted step-by-step) — the derived column records the real shape.
-    S = 64
-    ns = 262_144 if ops.on_tpu() else 4_096
+    S = 8 if QUICK else 64
+    ns = 262_144 if ops.on_tpu() else (1_024 if QUICK else 4_096)
     ts = [np.sort(rng.uniform(0, 86_400, ns)) for _ in range(S)]
     dt_b = _t(lambda: ops.stream_sample_batched(ts, mr, mult), reps=1)
 
@@ -58,16 +66,34 @@ def run(csv: List[str]) -> None:
     dt_l = _t(_looped, reps=1)
     # canonical row name is the TPU shape; off-TPU runs append the actual
     # executed shape so trend tooling never compares incommensurable sizes
-    row = "kernels/batched_nsa_64x256k" if ns == 262_144 \
-        else f"kernels/batched_nsa_64x256k@64x{ns}"
+    row = "kernels/batched_nsa_64x256k" if (S, ns) == (64, 262_144) \
+        else f"kernels/batched_nsa_64x256k@{S}x{ns}"
     csv.append(f"{row},{dt_b*1e6:.0f},"
-               f"shape=64x{ns};dispatches=1;looped_{S}_dispatches_us={dt_l*1e6:.0f}")
+               f"shape={S}x{ns};dispatches=1;"
+               f"looped_{S}_dispatches_us={dt_l*1e6:.0f}")
 
-    # bucket_hist
+    # fused metrics engine: histogram + moments in one record pass
     ss = np.sort(rng.integers(0, mr, n)).astype(np.int32)
-    dt_k = _t(lambda: ops.bucket_hist(ss, mr))
-    dt_o = _t(lambda: ref.bucket_hist_ref(jnp.asarray(ss), mr))
-    csv.append(f"kernels/bucket_hist_1M,{dt_k*1e6:.0f},oracle_us={dt_o*1e6:.0f}")
+    dt_k = _t(lambda: ops.stream_metrics(ss, mr))
+    dt_o = _t(lambda: ref.stream_metrics_ref(jnp.asarray(ss)[None, :], mr))
+    csv.append(f"kernels/metrics_fused_1M{tag},{dt_k*1e6:.0f},"
+               f"oracle_us={dt_o*1e6:.0f}")
+
+    # ...and a full-day bucket axis (86 400 simulated seconds block-tiled
+    # through VMEM — the seed one-hot kernel could not express this shape)
+    nd = n // 4
+    ssd = np.sort(rng.integers(0, 86_400, nd)).astype(np.int32)
+    dt_k = _t(lambda: ops.stream_metrics(ssd, 86_400), reps=2)
+    csv.append(f"kernels/metrics_fused_day_axis@{nd},{dt_k*1e6:.0f},"
+               f"buckets=86400")
+
+    # batched metrics: S streams' histograms + moments, one 2-D dispatch
+    sss = [np.sort(rng.integers(0, mr, ns)).astype(np.int32)
+           for _ in range(S)]
+    dt_b = _t(lambda: ops.stream_metrics_batched(sss, mr), reps=1)
+    dt_l = _t(lambda: [ops.stream_metrics(x, mr) for x in sss], reps=1)
+    csv.append(f"kernels/metrics_fused_batched@{S}x{ns},{dt_b*1e6:.0f},"
+               f"dispatches=1;looped_{S}_dispatches_us={dt_l*1e6:.0f}")
 
     # volatility moments over a day of per-second counts
     q = rng.poisson(25.0, 86_400).astype(np.float32)

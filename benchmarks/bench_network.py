@@ -6,6 +6,7 @@ analogue) and report transported bytes + trend correlation vs the original.
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from typing import List
@@ -23,10 +24,11 @@ from repro.streamsim import (
 from repro.streamsim.metrics import trend_correlation
 
 TIME_RANGES = (600, 1200, 1800, 2400, 3000, 3600)
+_SCALE = 0.005 if bool(int(os.environ.get("BENCH_QUICK", "0"))) else 0.1
 
 
 def run(csv: List[str]) -> None:
-    s = preprocess(make_stream("userbehavior", scale=0.1, seed=0))
+    s = preprocess(make_stream("userbehavior", scale=_SCALE, seed=0))
     for mr in TIME_RANGES:
         sim = nsa(s, mr)
         q = StreamQueue(maxsize=4096)

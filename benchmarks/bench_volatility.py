@@ -1,29 +1,57 @@
 """Paper Tables 1-3: volatility of simulated stream data at the six time
 ranges on the three datasets, next to the original stream's statistics.
 
-Also reports the device-kernel path (repro.kernels.ops.volatility_stats)
-against the numpy statistics as a cross-check.
+Three beyond-paper rows track the fused metrics engine:
+- ``volatility/fused_engine/*``     — one engine call (histogram + moments)
+  vs the seed's separate bincount + moment passes, per dataset;
+- ``volatility/batched_sweep_3x6``  — the full Tables 1-3 scenario sweep
+  (3 datasets × 6 time ranges) reported through ONE batched metrics call
+  (the ``Controller.run_many`` path) vs 18 sequential per-scenario
+  dispatches, each re-reading its original stream (the seed
+  ``Controller.run`` metrics tax);
+- ``volatility/trend_cumsum_86400_w600`` — the O(n) cumsum sliding-mean
+  ``trend()`` vs the seed's O(n·w) ``np.convolve`` at window=600 over a
+  day-long (86 400-bucket) count series.
+
+Set ``BENCH_QUICK=1`` for CI-smoke scales.
 """
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
 import numpy as np
 
-from repro.kernels import ops
-from repro.streamsim import make_stream, nsa, per_second_counts, preprocess, volatility
+from repro.streamsim import (make_stream, metrics_batched, nsa,
+                             per_second_counts, preprocess, volatility)
+from repro.streamsim.metrics import sliding_mean, trend_correlation_from_counts
 
 TIME_RANGES = (600, 1200, 1800, 2400, 3000, 3600)
 # full-scale tables match the paper's magnitudes; SCALE trades runtime
 SCALE = {"sogouq": 1.0, "traffic": 1.0, "userbehavior": 0.25}
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+if QUICK:
+    SCALE = {k: 0.01 for k in SCALE}
+
+
+def _best(fn, reps=3):
+    """(result, min-of-reps seconds) — min is robust to scheduler noise."""
+    out, best = fn(), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
 
 
 def run(csv: List[str]) -> None:
+    streams, sims = {}, {}
     for name in ("sogouq", "traffic", "userbehavior"):
         t0 = time.perf_counter()
         s = preprocess(make_stream(name, scale=SCALE[name], seed=0))
+        streams[name] = s
         v0 = volatility(s)
         csv.append(f"volatility/{name}/original,{(time.perf_counter()-t0)*1e6:.0f},"
                    f"avg={v0.average:.2f};var={v0.variance:.2f};"
@@ -32,12 +60,70 @@ def run(csv: List[str]) -> None:
             t0 = time.perf_counter()
             sim = nsa(s, mr)
             dt = time.perf_counter() - t0
+            sims[(name, mr)] = sim
             v = volatility(sim, mr)
-            # kernel cross-check on the per-second counts
-            q = per_second_counts(sim, mr)
-            ka, kv_, kstd = ops.volatility_stats(q.astype(np.float32))
-            assert abs(float(ka) - v.average) < 1e-3 * max(v.average, 1)
             csv.append(
                 f"volatility/{name}/max{mr},{dt*1e6:.0f},"
                 f"avg={v.average:.2f};var={v.variance:.2f};"
-                f"std={v.std_variance:.2f};kernel_avg={float(ka):.2f}")
+                f"std={v.std_variance:.2f}")
+
+        # fused engine: ONE call yields counts AND moments; the seed path
+        # ran a bincount for the counts plus separate moment reductions
+        m, dt_fused = _best(lambda: metrics_batched([s], [None])[0])
+
+        def _seed_two_pass():
+            q = per_second_counts(s)
+            return (float(q.sum()), float((q.astype(np.float64) ** 2).sum()))
+
+        _, dt_seed = _best(_seed_two_pass)
+        assert abs(m.volatility.average - v0.average) <= \
+            1e-3 * max(v0.average, 1e-9)
+        csv.append(f"volatility/fused_engine/{name},{dt_fused*1e6:.0f},"
+                   f"seed_two_pass_us={dt_seed*1e6:.0f};"
+                   f"avg={m.volatility.average:.2f}")
+
+    # ---- batched 3×6 scenario sweep vs 18 sequential dispatches ----------
+    names = list(streams)
+    scenarios = [(n, mr) for n in names for mr in TIME_RANGES]
+
+    t0 = time.perf_counter()
+    ms = metrics_batched(
+        [streams[n] for n in names] + [sims[sc] for sc in scenarios],
+        [None] * len(names) + [mr for _, mr in scenarios])
+    om = dict(zip(names, ms[:len(names)]))
+    batched = {
+        sc: (om[sc[0]].volatility, m.volatility,
+             trend_correlation_from_counts(om[sc[0]].counts, m.counts))
+        for sc, m in zip(scenarios, ms[len(names):])}
+    dt_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sequential = {}
+    for name, mr in scenarios:  # the seed per-run metrics tax, 18×
+        s, sim = streams[name], sims[(name, mr)]
+        sequential[(name, mr)] = (
+            volatility(s), volatility(sim, mr),
+            trend_correlation_from_counts(per_second_counts(s),
+                                          per_second_counts(sim, mr)))
+    dt_seq = time.perf_counter() - t0
+
+    for sc in scenarios:
+        assert abs(batched[sc][1].average - sequential[sc][1].average) <= \
+            1e-3 * max(sequential[sc][1].average, 1e-9)
+    csv.append(
+        f"volatility/batched_sweep_3x6,{dt_batched*1e6:.0f},"
+        f"scenarios={len(scenarios)};sequential_us={dt_seq*1e6:.0f};"
+        f"speedup={dt_seq/max(dt_batched, 1e-9):.1f}x")
+
+    # ---- cumsum trend vs the seed's convolve at window=600 over a day ----
+    rng = np.random.default_rng(0)
+    day = rng.poisson(25.0, 86_400).astype(np.float64)
+    w = 600
+    t_cum, dt_cum = _best(lambda: sliding_mean(day, w), reps=7)
+    t_conv, dt_conv = _best(
+        lambda: np.convolve(day, np.ones(w) / w, mode="same"), reps=7)
+    np.testing.assert_allclose(t_cum, t_conv, rtol=1e-9, atol=1e-9)
+    csv.append(
+        f"volatility/trend_cumsum_86400_w600,{dt_cum*1e6:.0f},"
+        f"convolve_us={dt_conv*1e6:.0f};"
+        f"speedup={dt_conv/max(dt_cum, 1e-9):.1f}x")

@@ -9,6 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Alongside the CSV, every module's rows are written machine-readable to
 ``BENCH_<module>.json`` (set ``BENCH_OUT_DIR`` to redirect; default CWD) so
 the per-PR perf trajectory can be tracked by tooling instead of CSV scraping.
+
+``BENCH_QUICK=1`` switches every module to CI-smoke scales (small synthetic
+streams, reduced kernel shapes); reduced rows carry an ``@shape`` suffix in
+their name so trend tooling never mixes them with full-scale rows. CI runs
+the quick mode on every PR and uploads the JSON as workflow artifacts.
 """
 
 import json

@@ -7,10 +7,11 @@ Paper hot-spots (bandwidth-bound scans over millions of records):
 - :mod:`repro.kernels.compact`       — mask compaction: tiled exclusive
   prefix sum with an SMEM carry -> per-record write positions + total, so
   kept-record indices materialize on device (no host round-trip).
-- :mod:`repro.kernels.bucket_hist`   — per-scale-stamp histogram via the
-  TPU one-hot-matmul idiom (MXU-resident counting).
-- :mod:`repro.kernels.volatility`    — fused count moments (sum, sum-sq)
-  for the Tables 1-3 statistics in one pass.
+- :mod:`repro.kernels.metrics_fused` — fused batched metrics engine: the
+  per-scale-stamp histogram (int32-exact, bucket axis block-tiled so a full
+  86 400-second day fits VMEM) AND its count moments [Σq, Σq²] from ONE
+  pass over the record tiles of S stacked streams (subsumes the seed's
+  separate one-hot histogram and moment kernels).
 
 Serving hot-spot under the paper's load-testing scenario:
 - :mod:`repro.kernels.flash_decode`  — blocked online-softmax GQA decode

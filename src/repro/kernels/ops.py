@@ -15,11 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.bucket_hist import LANE, TILE, bucket_hist_pallas
 from repro.kernels.compact import compact_positions_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.metrics_fused import (BUCKET_BLOCK, TILE,
+                                         stream_metrics_pallas)
 from repro.kernels.stream_sample import stream_sample_pallas
-from repro.kernels.volatility import volatility_pallas
 
 
 def on_tpu() -> bool:
@@ -208,23 +208,94 @@ def compact_mask(mask: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
     return idx, int(total[0])
 
 
+# -------------------------------------------------------- metrics engine
+# int32 histogram accumulation: exact while every bucket count < 2**31
+# (the seed's f32 one-hot kernel silently rounded past 2**24)
+_HIST_COUNT_LIMIT = 2 ** 31 - 1
+
+
+def _check_metrics_domain(n_records: int) -> None:
+    """A bucket count can at most reach the record count; refuse streams
+    whose counts could wrap the int32 accumulator rather than round."""
+    if n_records > _HIST_COUNT_LIMIT:
+        raise PallasDomainError(
+            f"{n_records} records could overflow the int32 histogram "
+            f"accumulator (limit {_HIST_COUNT_LIMIT}); use the numpy "
+            "metrics path")
+
+
+def _metrics_padded(ss_list, max_range: int):
+    """Stack ragged scale-stamp streams into the kernel's (S, N) layout."""
+    S = len(ss_list)
+    lengths = np.array([len(s) for s in ss_list], np.int64)
+    _check_metrics_domain(int(lengths.max(initial=0)))
+    buckets = int(-(-max_range // BUCKET_BLOCK) * BUCKET_BLOCK)
+    N = max(int(-(-lengths.max(initial=1) // TILE) * TILE), TILE)
+    ssb = np.full((S, N), buckets, np.int32)     # padding id >= buckets
+    for s, row in enumerate(ss_list):
+        if len(row) and (row.min() < 0 or row.max() >= max_range):
+            raise ValueError(
+                f"stream {s}: scale stamps must lie in [0, {max_range})")
+        ssb[s, :len(row)] = row
+    return ssb, buckets, lengths
+
+
+def stream_metrics(ss: jnp.ndarray,
+                   max_range: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused per-second histogram + count moments, one device pass.
+
+    ss: (n,) integer scale stamps in [0, max_range) (any order; sorted input
+    is fastest — see the kernel docstring). Returns
+    ``(hist int32 (max_range,), moments f32 (2,) = [Σq, Σq²])``.
+    """
+    hist, mom, _ = stream_metrics_batched([ss], max_range)
+    return hist[0], mom[0]
+
+
+def stream_metrics_batched(ss_seq, max_range: int):
+    """Batched fused metrics: S streams' histograms + moments, ONE dispatch.
+
+    ss_seq: sequence of S 1-D integer scale-stamp arrays (ragged lengths
+    allowed; empty streams yield all-zero rows). Returns
+    ``(hist int32 (S, max_range), moments f32 (S, 2), lengths int64 (S,))``.
+    """
+    ss_list = [np.asarray(s, np.int32).reshape(-1) for s in ss_seq]
+    if not ss_list:
+        raise ValueError("need at least one stream")
+    if max_range <= 0:
+        raise ValueError("max_range must be positive")
+    ssb, buckets, lengths = _metrics_padded(ss_list, max_range)
+    hist, mom = stream_metrics_pallas(jnp.asarray(ssb), buckets,
+                                      interpret=not _on_tpu())
+    return hist[:, :max_range], mom, lengths
+
+
 # --------------------------------------------------------------- histogram
 def bucket_hist(ss: jnp.ndarray, max_range: int) -> jnp.ndarray:
-    """Per-bucket counts of scale stamps; returns (max_range,) int32."""
-    ss = jnp.asarray(ss, jnp.int32)
-    buckets = int(-(-max_range // LANE) * LANE)  # pad bucket axis to LANE
-    ssp, _ = _pad_to(ss, TILE, buckets)          # pad ids out of range
-    hist = bucket_hist_pallas(ssp, buckets, interpret=not _on_tpu())
-    return hist[:max_range]
+    """Per-bucket counts of scale stamps; returns (max_range,) int32.
+
+    Legacy wrapper over the fused metrics engine: counts accumulate in int32
+    (bit-exact up to 2**31 per bucket — the seed's f32 one-hot kernel lost
+    exactness past 2**24) and :class:`PallasDomainError` is raised beyond
+    that domain instead of returning silently wrong counts.
+    """
+    return stream_metrics(ss, max_range)[0]
 
 
 # -------------------------------------------------------------- volatility
 def volatility_moments(q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused (Σq, Σq²) over the per-second count series."""
-    q = jnp.asarray(q, jnp.float32)
-    qp, n = _pad_to(q, TILE, 0.0)
-    out = volatility_pallas(qp, interpret=not _on_tpu())
+    """Fused (Σq, Σq²) over an arbitrary count series.
+
+    When the series comes from scale stamps, prefer :func:`stream_metrics`,
+    which produces the histogram AND its moments in the same record pass;
+    this reduction (which subsumed the seed's standalone volatility kernel)
+    exists for series that are already materialized.
+    """
+    out = _volatility_moments_jit(jnp.asarray(q, jnp.float32))
     return out[0], out[1]
+
+
+_volatility_moments_jit = jax.jit(ref.volatility_ref)
 
 
 def volatility_stats(q: jnp.ndarray) -> Tuple[float, float, float]:
@@ -256,6 +327,7 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 __all__ = [
     "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
-    "flash_decode", "on_tpu", "stream_sample", "stream_sample_batched",
-    "stream_sample_ref", "volatility_moments", "volatility_stats",
+    "flash_decode", "on_tpu", "stream_metrics", "stream_metrics_batched",
+    "stream_sample", "stream_sample_batched", "stream_sample_ref",
+    "volatility_moments", "volatility_stats",
 ]

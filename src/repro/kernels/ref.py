@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -61,6 +62,22 @@ def compact_ref(mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def bucket_hist_ref(ss: jnp.ndarray, max_range: int) -> jnp.ndarray:
     """Histogram of scale stamps: counts[b] = |{i : ss_i == b}|."""
     return jnp.zeros(max_range, jnp.int32).at[ss].add(1)
+
+
+def stream_metrics_ref(ss: jnp.ndarray,
+                       buckets: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-metrics-engine oracle: batched histogram + count moments.
+
+    Same contract as ``stream_metrics_pallas``: ss (S, N) int32 with padding
+    entries >= ``buckets`` (dropped). Returns (hist int32 (S, buckets),
+    moments f32 (S, 2)) with moments[s] = [Σq, Σq²] over hist[s].
+    """
+    hist = jax.vmap(
+        lambda row: jnp.zeros(buckets, jnp.int32).at[row].add(1, mode="drop")
+    )(ss)
+    q = hist.astype(jnp.float32)
+    mom = jnp.stack([q.sum(axis=1), (q * q).sum(axis=1)], axis=1)
+    return hist, mom
 
 
 def volatility_ref(q: jnp.ndarray) -> jnp.ndarray:

@@ -19,7 +19,14 @@ from repro.streamsim.datasets import (  # noqa: F401
 )
 from repro.streamsim.preprocess import Stream, preprocess  # noqa: F401
 from repro.streamsim.nsa import nsa, nsa_batched, nsa_paper, scale_stamps  # noqa: F401
-from repro.streamsim.metrics import volatility, per_second_counts  # noqa: F401
+from repro.streamsim.metrics import (  # noqa: F401
+    StreamMetrics,
+    metrics_batched,
+    per_second_counts,
+    trend,
+    trend_correlation,
+    volatility,
+)
 from repro.streamsim.store import StreamStore  # noqa: F401
 from repro.streamsim.queue import StreamQueue  # noqa: F401
 from repro.streamsim.producer import Producer, VirtualClock, RealClock  # noqa: F401

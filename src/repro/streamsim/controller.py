@@ -13,16 +13,20 @@ callback and the repository is a JSON directory.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
+import threading
 import time
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.streamsim.datasets import make_stream
-from repro.streamsim.metrics import Volatility, trend_correlation, volatility
-from repro.streamsim.nsa import compression_factor, nsa
+from repro.streamsim.metrics import (StreamMetrics, Volatility,
+                                     metrics_batched,
+                                     trend_correlation_from_counts)
+from repro.streamsim.nsa import compression_factor, nsa, nsa_batched
 from repro.streamsim.preprocess import Stream, preprocess
 from repro.streamsim.producer import Producer, VirtualClock
 from repro.streamsim.queue import StreamQueue
@@ -54,6 +58,7 @@ class Controller:
         self.store = StreamStore(store_dir)
         self.metrics_dir = Path(metrics_dir or (Path(store_dir) / "_metrics"))
         self.metrics_dir.mkdir(parents=True, exist_ok=True)
+        self._metrics_seq = itertools.count()
 
     # ----------------------------------------------------- (1) simulate/run
     def prepare(self, dataset: str, *, scale: float = 1.0, seed: int = 0,
@@ -91,28 +96,15 @@ class Controller:
         self.store.put(key, sim, {"max_range": max_range})
         return sim
 
-    def run(self, dataset: str, max_range: int,
-            consumer: Callable[[StreamQueue], Dict], *,
-            scale: float = 1.0, seed: int = 0,
-            queue_size: int = 64, backend: str = "auto") -> SimulationReport:
-        """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
-
-        ``consumer`` drains the queue and returns its own metrics dict
-        (function (2): collecting workload metrics of the SPS)."""
-        t0 = time.perf_counter()
-        original = self.prepare(dataset, scale=scale, seed=seed)
-        t_pre = time.perf_counter() - t0
-
-        sim = self.simulate(dataset, max_range, scale=scale, seed=seed,
-                            backend=backend)
-        t_nsa = self._last_nsa_s
-
+    def _produce_consume(self, sim: Stream,
+                         consumer: Callable[[StreamQueue], Dict],
+                         queue_size: int):
+        """PSDA leg shared by :meth:`run` and :meth:`run_many`: producer
+        fills, consumer drains (bounded queue means we interleave: run the
+        producer in a thread to honour backpressure)."""
         queue = StreamQueue(maxsize=queue_size)
         producer = Producer(sim, queue, clock=VirtualClock())
         t0 = time.perf_counter()
-        # virtual-time: producer fills, consumer drains (bounded queue means
-        # we interleave: run producer in a thread to honour backpressure)
-        import threading
         status = [None]
 
         def _produce():
@@ -125,29 +117,130 @@ class Controller:
         t_prod = time.perf_counter() - t0
         if status[0] != 0:
             raise RuntimeError("producer reported fault status")
+        return ({**consumer_metrics, **queue.stats(), **producer.stats()},
+                t_prod)
 
+    def _report(self, dataset: str, max_range: int, original: Stream,
+                sim: Stream, om: StreamMetrics, sm: StreamMetrics,
+                timings, consumer_metrics: Dict) -> SimulationReport:
+        t_pre, t_nsa, t_prod = timings
         report = SimulationReport(
             dataset=dataset,
             max_range=max_range,
             original_rows=len(original),
             simulated_rows=len(sim),
             compression=compression_factor(original, max_range),
-            original_volatility=volatility(original),
-            simulated_volatility=volatility(sim, max_range),
-            trend_corr=trend_correlation(original, sim),
+            original_volatility=om.volatility,
+            simulated_volatility=sm.volatility,
+            trend_corr=trend_correlation_from_counts(om.counts, sm.counts),
             preprocess_s=t_pre,
             nsa_s=t_nsa,
             produce_s=t_prod,
-            consumer_metrics={**consumer_metrics, **queue.stats(),
-                              **producer.stats()},
+            consumer_metrics=consumer_metrics,
         )
         self.save_metrics(report)
         return report
 
+    def run(self, dataset: str, max_range: int,
+            consumer: Callable[[StreamQueue], Dict], *,
+            scale: float = 1.0, seed: int = 0,
+            queue_size: int = 64, backend: str = "auto") -> SimulationReport:
+        """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
+
+        ``consumer`` drains the queue and returns its own metrics dict
+        (function (2): collecting workload metrics of the SPS). All report
+        statistics — original and simulated volatility plus the trend
+        correlation — come from ONE batched metrics-engine call, so each
+        stream is read once instead of once per statistic."""
+        t0 = time.perf_counter()
+        original = self.prepare(dataset, scale=scale, seed=seed)
+        t_pre = time.perf_counter() - t0
+
+        sim = self.simulate(dataset, max_range, scale=scale, seed=seed,
+                            backend=backend)
+        t_nsa = self._last_nsa_s
+
+        consumer_metrics, t_prod = self._produce_consume(sim, consumer,
+                                                         queue_size)
+        om, sm = metrics_batched([original, sim], [None, max_range],
+                                 backend=backend)
+        return self._report(dataset, max_range, original, sim, om, sm,
+                            (t_pre, t_nsa, t_prod), consumer_metrics)
+
+    def run_many(self, datasets: Sequence[str], max_ranges: Sequence[int],
+                 consumer: Callable[[StreamQueue], Dict], *,
+                 scale: float = 1.0, seed: int = 0, queue_size: int = 64,
+                 backend: str = "auto") -> List[SimulationReport]:
+        """The Tables 1-3 scenario sweep (datasets × time ranges) as batched
+        dispatches instead of ``len(datasets) * len(max_ranges)`` sequential
+        :meth:`run` calls.
+
+        Per ``max_range``, all store-missing datasets go through ONE
+        :func:`nsa_batched` dispatch; every scenario's statistics (original
+        + simulated volatility, trend correlation) then come from ONE
+        batched metrics-engine call covering all original and simulated
+        streams. Emits one :class:`SimulationReport` per (dataset,
+        max_range) scenario, in ``for dataset: for max_range`` order, each
+        equivalent to the per-scenario :meth:`run` report (``nsa_s`` holds
+        the batch's shared NSA wall time for scenarios simulated together,
+        0.0 for store cache hits)."""
+        datasets = list(datasets)
+        max_ranges = list(max_ranges)
+        originals, t_pre = {}, {}
+        for d in datasets:  # per-dataset timing, matching run()'s reports
+            t0 = time.perf_counter()
+            originals[d] = self.prepare(d, scale=scale, seed=seed)
+            t_pre[d] = time.perf_counter() - t0
+
+        sims: Dict[tuple, Stream] = {}
+        nsa_s: Dict[tuple, float] = {}
+        for mr in max_ranges:
+            missing = [d for d in datasets
+                       if not self.store.exists(f"{d}__sim{mr}")]
+            t0 = time.perf_counter()
+            if missing:
+                batch = nsa_batched({d: originals[d] for d in missing}, mr,
+                                    backend=backend)
+                t_batch = time.perf_counter() - t0
+                for d in missing:
+                    self.store.put(f"{d}__sim{mr}", batch[d],
+                                   {"max_range": mr})
+            else:
+                batch, t_batch = {}, 0.0
+            for d in datasets:
+                sims[(d, mr)] = batch.get(d) if d in batch else \
+                    self.store.get(f"{d}__sim{mr}")
+                nsa_s[(d, mr)] = t_batch if d in batch else 0.0
+
+        scenarios = [(d, mr) for d in datasets for mr in max_ranges]
+        all_streams = [originals[d] for d in datasets] + \
+            [sims[s] for s in scenarios]
+        all_ranges: List[Optional[int]] = [None] * len(datasets) + \
+            [mr for _, mr in scenarios]
+        ms = metrics_batched(all_streams, all_ranges, backend=backend)
+        om = dict(zip(datasets, ms[:len(datasets)]))
+        sm = dict(zip(scenarios, ms[len(datasets):]))
+
+        reports = []
+        for d, mr in scenarios:
+            consumer_metrics, t_prod = self._produce_consume(
+                sims[(d, mr)], consumer, queue_size)
+            reports.append(self._report(
+                d, mr, originals[d], sims[(d, mr)], om[d], sm[(d, mr)],
+                (t_pre[d], nsa_s[(d, mr)], t_prod), consumer_metrics))
+        return reports
+
     # -------------------------------------------------- (3) metrics manager
     def save_metrics(self, report: SimulationReport) -> Path:
-        path = self.metrics_dir / (
-            f"{report.dataset}_max{report.max_range}_{int(time.time()*1e3)}.json")
+        # ms stamp + a monotonic per-controller sequence number: two reports
+        # landing in the same millisecond (routine under run_many) must not
+        # overwrite each other
+        stem = (f"{report.dataset}_max{report.max_range}_"
+                f"{int(time.time() * 1e3)}")
+        path = self.metrics_dir / f"{stem}_{next(self._metrics_seq):06d}.json"
+        while path.exists():  # other controllers writing the same directory
+            path = self.metrics_dir / \
+                f"{stem}_{next(self._metrics_seq):06d}.json"
         with open(path, "w") as f:
             json.dump(report.to_json(), f, indent=2, default=_np_default)
         return path

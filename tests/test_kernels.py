@@ -151,6 +151,73 @@ class TestCompact:
         assert total == 0 and idx.shape == (0,)
 
 
+class TestStreamMetrics:
+    """The fused metrics engine: histogram + moments in one record pass."""
+
+    @pytest.mark.parametrize("n,max_range", [(1, 16), (512, 16), (4096, 128),
+                                             (20_000, 600), (1024, 3600),
+                                             (4096, 86_400)])
+    def test_matches_oracle(self, n, max_range):
+        rng = np.random.default_rng(n + max_range)
+        ss = np.sort(rng.integers(0, max_range, n)).astype(np.int32)
+        h_k, m_k = ops.stream_metrics(ss, max_range)
+        h_o = ref.bucket_hist_ref(jnp.asarray(ss), max_range)
+        np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_o))
+        assert h_k.dtype == jnp.int32, "int32 counts — no f32 rounding"
+        assert int(h_k.sum()) == n
+        q = np.asarray(h_o, np.float64)
+        np.testing.assert_allclose(np.asarray(m_k),
+                                   [q.sum(), (q * q).sum()], rtol=1e-5)
+
+    def test_unsorted_input_still_exact(self):
+        # sortedness only narrows the kernel's data-adaptive bucket-block
+        # loop; correctness must not depend on it
+        rng = np.random.default_rng(7)
+        ss = rng.integers(0, 600, 5000).astype(np.int32)
+        h_k, _ = ops.stream_metrics(ss, 600)
+        np.testing.assert_array_equal(np.asarray(h_k),
+                                      np.bincount(ss, minlength=600))
+
+    @pytest.mark.parametrize("lengths", [(256, 256), (0, 1, 3000, 1024),
+                                         (1, 8192)])
+    def test_batched_equals_looped(self, lengths):
+        rng = np.random.default_rng(sum(lengths))
+        mr = 300
+        sss = [np.sort(rng.integers(0, mr, n)).astype(np.int32)
+               for n in lengths]
+        h_b, m_b, lens = ops.stream_metrics_batched(sss, mr)
+        np.testing.assert_array_equal(lens, lengths)
+        for s, ss in enumerate(sss):
+            np.testing.assert_array_equal(
+                np.asarray(h_b[s]), np.bincount(ss, minlength=mr))
+            if len(ss) == 0:
+                assert float(m_b[s, 0]) == float(m_b[s, 1]) == 0.0
+            else:
+                h_1, m_1 = ops.stream_metrics(ss, mr)
+                np.testing.assert_array_equal(np.asarray(h_b[s]),
+                                              np.asarray(h_1))
+                np.testing.assert_allclose(np.asarray(m_b[s]),
+                                           np.asarray(m_1), rtol=1e-6)
+
+    def test_out_of_range_stamps_rejected(self):
+        with pytest.raises(ValueError):
+            ops.stream_metrics(np.array([0, 600]), 600)
+        with pytest.raises(ValueError):
+            ops.stream_metrics(np.array([-1, 5]), 600)
+
+    def test_int32_overflow_domain_guarded(self):
+        # counts accumulate in int32: exact up to 2**31 per bucket (the
+        # seed's f32 one-hot kernel silently rounded past 2**24); beyond
+        # the int32 domain the wrapper must raise, not wrap
+        ops._check_metrics_domain(2 ** 31 - 1)  # in-domain: no raise
+        with pytest.raises(ops.PallasDomainError):
+            ops._check_metrics_domain(2 ** 31)
+
+    def test_empty_batch_rejected(self):
+        with pytest.raises(ValueError):
+            ops.stream_metrics_batched([], 10)
+
+
 class TestBucketHist:
     @pytest.mark.parametrize("n,max_range", [(512, 16), (4096, 128),
                                              (20_000, 600), (1024, 3600)])

@@ -1,0 +1,180 @@
+"""Metrics-layer tests: backend equivalence (numpy vs pallas-interpret),
+cumsum trend semantics, batched metrics, trend correlation.
+
+Contract under test (see repro/streamsim/metrics.py): per-second counts are
+bit-exact across backends; derived moments agree within 1e-3 relative
+tolerance (the device engine reduces in f32).
+"""
+
+import numpy as np
+import pytest
+
+from repro.streamsim import make_stream, metrics_batched, nsa, preprocess
+from repro.streamsim.metrics import (per_second_counts, sliding_mean, trend,
+                                     trend_correlation,
+                                     trend_correlation_from_counts,
+                                     volatility)
+from repro.streamsim.preprocess import Stream
+
+
+def _stream(t, name="s"):
+    t = np.asarray(t, np.float64)
+    return Stream(name, t, {"v": np.arange(len(t))})
+
+
+def _edge_streams():
+    """The degenerate shapes the engine must agree on across backends."""
+    rng = np.random.default_rng(0)
+    return {
+        "empty": _stream([]),
+        "single": _stream([1234.5]),
+        "zero_span": _stream(np.full(257, 42.0)),   # all timestamps equal
+        "dense": _stream(np.sort(rng.uniform(0, 3600.0, 5000))),
+        "sparse": _stream(np.sort(rng.uniform(0, 86_400.0, 37))),
+    }
+
+
+def _vol_close(a, b, rtol=1e-3):
+    assert a.time_range == b.time_range
+    for f in ("average", "variance", "std_variance"):
+        x, y = getattr(a, f), getattr(b, f)
+        assert abs(x - y) <= rtol * max(abs(x), abs(y), 1e-9), (f, a, b)
+
+
+class TestBackendEquivalence:
+    @pytest.mark.parametrize("name", ["empty", "single", "zero_span",
+                                      "dense", "sparse"])
+    def test_counts_bit_exact(self, name):
+        s = _edge_streams()[name]
+        qn = per_second_counts(s, backend="numpy")
+        qp = per_second_counts(s, backend="pallas")
+        np.testing.assert_array_equal(qn, qp)
+
+    @pytest.mark.parametrize("name", ["empty", "single", "zero_span",
+                                      "dense", "sparse"])
+    def test_volatility_within_tolerance(self, name):
+        s = _edge_streams()[name]
+        _vol_close(volatility(s, backend="numpy"),
+                   volatility(s, backend="pallas"))
+
+    def test_simulated_stream_counts(self):
+        s = preprocess(make_stream("traffic", scale=0.01, seed=3))
+        sim = nsa(s, 600)
+        np.testing.assert_array_equal(
+            per_second_counts(sim, 600, backend="numpy"),
+            per_second_counts(sim, 600, backend="pallas"))
+        _vol_close(volatility(sim, 600, backend="numpy"),
+                   volatility(sim, 600, backend="pallas"))
+
+    def test_bad_backend_rejected(self):
+        with pytest.raises(ValueError):
+            volatility(_stream([1.0]), backend="cuda")
+
+    def test_time_range_below_max_stamp_expands(self):
+        # scale stamps are never clipped to a user time range: a too-small
+        # tr must expand to max stamp + 1 on BOTH backends (seed bincount
+        # semantics), not mis-bin on numpy or raise on pallas
+        s = preprocess(make_stream("traffic", scale=0.005, seed=8))
+        sim = nsa(s, 600)
+        assert int(sim.scale_stamp.max()) > 300
+        qn = per_second_counts(sim, 300, backend="numpy")
+        qp = per_second_counts(sim, 300, backend="pallas")
+        np.testing.assert_array_equal(qn, qp)
+        assert len(qn) == int(sim.scale_stamp.max()) + 1
+        vn = volatility(sim, 300, backend="numpy")
+        vp = volatility(sim, 300, backend="pallas")
+        assert vn.time_range == vp.time_range == len(qn)
+        _vol_close(vn, vp)
+        assert vn.average == pytest.approx(qn.mean())
+
+    def test_auto_backend_matches_numpy(self):
+        s = _edge_streams()["dense"]
+        np.testing.assert_array_equal(per_second_counts(s, backend="auto"),
+                                      per_second_counts(s, backend="numpy"))
+
+
+class TestMetricsBatched:
+    @pytest.mark.parametrize("backend", ["numpy", "pallas"])
+    def test_ragged_batch_equals_per_stream(self, backend):
+        # ragged lengths + mixed time ranges + empty/degenerate members in
+        # ONE batched call must equal per-stream evaluation
+        streams = list(_edge_streams().values())
+        sim = nsa(preprocess(make_stream("sogouq", scale=0.005, seed=5)), 60)
+        streams.append(sim)
+        ranges = [None] * (len(streams) - 1) + [60]
+        ms = metrics_batched(streams, ranges, backend=backend)
+        assert len(ms) == len(streams)
+        for s, tr, m in zip(streams, ranges, ms):
+            np.testing.assert_array_equal(
+                m.counts, per_second_counts(s, tr, backend="numpy"))
+            _vol_close(m.volatility, volatility(s, tr, backend="numpy"))
+
+    def test_backends_agree(self):
+        streams = [s for s in _edge_streams().values() if len(s)]
+        mn = metrics_batched(streams, [None] * len(streams),
+                             backend="numpy")
+        mp = metrics_batched(streams, [None] * len(streams),
+                             backend="pallas")
+        for a, b in zip(mn, mp):
+            np.testing.assert_array_equal(a.counts, b.counts)
+            _vol_close(a.volatility, b.volatility)
+
+    def test_misaligned_args_rejected(self):
+        with pytest.raises(ValueError):
+            metrics_batched([_stream([1.0])], [None, 5])
+
+
+class TestTrend:
+    @pytest.mark.parametrize("n,w", [(1, 1), (10, 1), (10, 3), (10, 4),
+                                     (100, 600), (7, 7), (50, 49), (3, 2),
+                                     (2, 5)])
+    def test_sliding_mean_matches_convolve(self, n, w):
+        # the O(n) cumsum path must reproduce the seed's
+        # np.convolve(q, ones(w)/w, mode="same") semantics exactly,
+        # including w = 1 (identity) and w > n (clamped to n)
+        rng = np.random.default_rng(n * 100 + w)
+        q = rng.poisson(25.0, n).astype(np.float64)
+        we = min(w, n)
+        expected = np.convolve(q, np.ones(we) / we, mode="same")
+        np.testing.assert_allclose(sliding_mean(q, w), expected,
+                                   rtol=1e-12, atol=1e-12)
+
+    def test_window_one_is_identity(self):
+        q = np.arange(20, dtype=np.float64)
+        np.testing.assert_array_equal(sliding_mean(q, 1), q)
+
+    def test_window_larger_than_series(self):
+        q = np.array([2.0, 4.0, 6.0])
+        # clamped to w = n = 3: same-mode edges divide by w, not the
+        # truncated overlap
+        np.testing.assert_allclose(sliding_mean(q, 100),
+                                   [(2 + 4) / 3, (2 + 4 + 6) / 3,
+                                    (4 + 6) / 3])
+
+    def test_empty(self):
+        assert len(sliding_mean(np.zeros(0), 5)) == 0
+
+    def test_trend_of_stream(self):
+        s = _edge_streams()["dense"]
+        t_np = trend(s, 60, backend="numpy")
+        t_pl = trend(s, 60, backend="pallas")
+        np.testing.assert_allclose(t_np, t_pl, rtol=1e-9)
+        assert len(t_np) == len(per_second_counts(s))
+
+
+class TestTrendCorrelation:
+    def test_from_counts_matches_streams(self):
+        s = preprocess(make_stream("traffic", scale=0.01, seed=1))
+        sim = nsa(s, 300)
+        direct = trend_correlation(s, sim, window_s=60)
+        from_counts = trend_correlation_from_counts(
+            per_second_counts(s), per_second_counts(sim, 300), window_s=60)
+        assert direct == pytest.approx(from_counts, rel=1e-12)
+        assert -1.0 <= direct <= 1.0
+
+    def test_self_correlation_is_one(self):
+        s = _edge_streams()["dense"]
+        assert trend_correlation(s, s) == pytest.approx(1.0)
+
+    def test_empty_is_nan(self):
+        assert np.isnan(trend_correlation(_stream([]), _stream([1.0])))

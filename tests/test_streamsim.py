@@ -203,6 +203,47 @@ class TestProducer:
         assert not th.is_alive()
         assert sum(len(b) for b in got) == len(sim)
 
+    @pytest.mark.parametrize("max_range", [40, 5000])
+    def test_gap_batched_run_matches_per_tick(self, max_range):
+        # the VirtualClock fast path batches sleeps across empty buckets
+        # (O(#non-empty) host work); the consumer-observable behaviour must
+        # be identical to the literal per-second loop — same bucket
+        # sequence, same emit_time stamps, same final clock value
+        sim = self._sim(max_range)
+        if max_range == 5000:   # dense case covers the no-gap edge
+            assert len(np.unique(sim.scale_stamp)) < max_range, \
+                "sparse case needs empty gaps"
+        q1, q2 = StreamQueue(100_000), StreamQueue(100_000)
+        p1 = Producer(sim, q1, clock=VirtualClock())
+        assert p1.run() == 0
+        p2 = Producer(sim, q2, clock=VirtualClock())
+        assert p2._run_per_tick() == 0
+        b1, b2 = list(q1), list(q2)
+        assert [b.scale_stamp for b in b1] == [b.scale_stamp for b in b2]
+        assert [b.emit_time for b in b1] == [b.emit_time for b in b2]
+        assert p1.clock.now == p2.clock.now
+        assert p1.stats() == p2.stats()
+
+    def test_real_clock_keeps_per_tick_semantics(self):
+        # non-virtual clocks must keep the paper's one-sleep-per-second
+        # loop; a counting clock stands in for RealClock
+        class CountingClock:
+            def __init__(self):
+                self.calls, self.now = 0, 0.0
+
+            def sleep(self, s):
+                self.calls += 1
+                self.now += s
+
+            def time(self):
+                return self.now
+
+        sim = self._sim(40)
+        clock = CountingClock()
+        q = StreamQueue(100_000)
+        assert Producer(sim, q, clock=clock).run() == 0
+        assert clock.calls == 40, "one sleep per simulated second"
+
 
 # ------------------------------------------------------------------- store
 class TestStore:
@@ -248,3 +289,62 @@ class TestStore:
         assert rep1.nsa_s > 0.0, "first run actually performs NSA"
         rep2 = c.run("traffic", 40, consumer, scale=0.002, seed=9)
         assert rep2.nsa_s == 0.0, "cache hit performs no NSA"
+
+    def test_save_metrics_no_same_millisecond_collision(self, tmp_path):
+        # regression: filenames were ms-resolution time.time() only, so two
+        # reports in the same millisecond (routine under run_many)
+        # overwrote each other
+        from repro.streamsim import Controller, SimulationReport
+        from repro.streamsim.metrics import Volatility
+
+        c = Controller(str(tmp_path / "store"))
+        v = Volatility(1.0, 0.5, 0.7, 40)
+        rep = SimulationReport("traffic", 40, 100, 10, 2160.0, v, v, 0.9,
+                               0.0, 0.0, 0.0, {})
+        for _ in range(20):
+            c.save_metrics(rep)
+        assert len(c.list_metrics()) == 20
+
+
+class TestRunMany:
+    @staticmethod
+    def _consumer(queue):
+        return {"records_seen": sum(len(b) for b in queue)}
+
+    def test_sweep_matches_per_scenario_run(self, tmp_path):
+        # the batched scenario sweep must report exactly what sequential
+        # per-scenario Controller.run reports
+        from repro.streamsim import Controller
+
+        datasets, max_ranges = ["traffic", "sogouq"], [40, 80]
+        c = Controller(str(tmp_path / "batched"))
+        reports = c.run_many(datasets, max_ranges, self._consumer,
+                             scale=0.002, seed=9)
+        assert [(r.dataset, r.max_range) for r in reports] == \
+            [(d, mr) for d in datasets for mr in max_ranges]
+        assert len(c.list_metrics()) == len(reports)
+
+        ref_c = Controller(str(tmp_path / "sequential"))
+        for r in reports:
+            ref = ref_c.run(r.dataset, r.max_range, self._consumer,
+                            scale=0.002, seed=9)
+            assert r.original_rows == ref.original_rows
+            assert r.simulated_rows == ref.simulated_rows
+            assert r.compression == ref.compression
+            assert r.trend_corr == pytest.approx(ref.trend_corr, rel=1e-9)
+            for f in ("average", "variance", "std_variance", "time_range"):
+                assert getattr(r.simulated_volatility, f) == pytest.approx(
+                    getattr(ref.simulated_volatility, f), rel=1e-6)
+                assert getattr(r.original_volatility, f) == pytest.approx(
+                    getattr(ref.original_volatility, f), rel=1e-6)
+            assert r.consumer_metrics["records_seen"] == \
+                ref.consumer_metrics["records_seen"]
+
+    def test_sweep_reuses_store_cache(self, tmp_path):
+        from repro.streamsim import Controller
+
+        c = Controller(str(tmp_path / "store"))
+        c.run("traffic", 40, self._consumer, scale=0.002, seed=9)
+        reports = c.run_many(["traffic"], [40], self._consumer,
+                             scale=0.002, seed=9)
+        assert reports[0].nsa_s == 0.0, "cached scenario performs no NSA"
