@@ -28,6 +28,19 @@ def _t(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
+def _tmin(fn, reps=3):
+    """Min-of-reps wall time (robust to scheduler noise)."""
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def run(csv: List[str]) -> None:
     rng = np.random.default_rng(0)
 
@@ -94,6 +107,34 @@ def run(csv: List[str]) -> None:
     dt_l = _t(lambda: [ops.stream_metrics(x, mr) for x in sss], reps=1)
     csv.append(f"kernels/metrics_fused_batched@{S}x{ns},{dt_b*1e6:.0f},"
                f"dispatches=1;looped_{S}_dispatches_us={dt_l*1e6:.0f}")
+
+    # device trend path (prefix-sum scan kernel + window gathers) vs the
+    # PR 2 host cumsum sliding mean, day-long count series at window=600
+    from repro.streamsim.metrics import (sliding_mean,
+                                         trend_correlation_from_counts)
+    nt = 8_640 if QUICK else 86_400
+    ttag = "" if nt == 86_400 else f"@{nt}"
+    day = rng.poisson(25.0, nt).astype(np.int64)
+    dt_k = _tmin(lambda: ops.trend_scan(day, 600))
+    dt_h = _tmin(lambda: sliding_mean(day.astype(np.float64), 600))
+    csv.append(f"kernels/trend_scan_86400_w600{ttag},{dt_k*1e6:.0f},"
+               f"host_cumsum_us={dt_h*1e6:.0f}")
+
+    # S×S correlation engine: full Pearson matrix from one scan + one Gram
+    # dispatch vs the per-pair host loop (S·(S-1)/2 pairwise calls)
+    Sc, nc = (8, 600) if QUICK else (64, 3_600)
+    ctag = "" if (Sc, nc) == (64, 3_600) else f"@{Sc}x{nc}"
+    qs = [rng.poisson(25.0, nc).astype(np.int64) for _ in range(Sc)]
+    dt_k = _tmin(lambda: ops.trend_correlation_batched(qs, 60), reps=2)
+
+    def _pairwise_host():
+        return [trend_correlation_from_counts(qs[a], qs[b], 60)
+                for a in range(Sc) for b in range(a + 1, Sc)]
+
+    dt_h = _tmin(_pairwise_host, reps=2)
+    csv.append(f"kernels/corr_matrix_64x64{ctag},{dt_k*1e6:.0f},"
+               f"shape={Sc}x{nc};dispatches=2;"
+               f"pairwise_host_{Sc*(Sc-1)//2}_pairs_us={dt_h*1e6:.0f}")
 
     # volatility moments over a day of per-second counts
     q = rng.poisson(25.0, 86_400).astype(np.float32)

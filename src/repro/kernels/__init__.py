@@ -12,6 +12,12 @@ Paper hot-spots (bandwidth-bound scans over millions of records):
   86 400-second day fits VMEM) AND its count moments [Σq, Σq²] from ONE
   pass over the record tiles of S stacked streams (subsumes the seed's
   separate one-hot histogram and moment kernels).
+- :mod:`repro.kernels.trend_scan`  — device-resident trend & correlation:
+  a batched prefix-sum scan-with-carry over per-second counts (the trend's
+  sliding-mean window sums) plus an all-pairs sufficient-statistics
+  accumulator (per-stream sums + S×S Gram matrix, VMEM-resident across the
+  time grid), so the whole Fig.-6 path — counts -> trend -> S×S Pearson
+  matrix — runs without a host cumsum.
 
 Serving hot-spot under the paper's load-testing scenario:
 - :mod:`repro.kernels.flash_decode`  — blocked online-softmax GQA decode

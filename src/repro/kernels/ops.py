@@ -8,7 +8,8 @@ sweep shapes/dtypes asserting allclose against the oracles.
 
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,9 @@ from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.metrics_fused import (BUCKET_BLOCK, TILE,
                                          stream_metrics_pallas)
 from repro.kernels.stream_sample import stream_sample_pallas
+from repro.kernels.trend_scan import TILE as TREND_TILE
+from repro.kernels.trend_scan import (PAIR_TILE, pair_stats_pallas,
+                                      trend_scan_pallas)
 
 
 def on_tpu() -> bool:
@@ -307,6 +311,245 @@ def volatility_stats(q: jnp.ndarray) -> Tuple[float, float, float]:
     return avg, var, jnp.sqrt(var)
 
 
+# ------------------------------------------------------- trend & correlation
+# int32 prefix-sum accumulation: exact while a stream's total record count
+# stays below 2**31 (same bound as the histogram accumulator)
+_TREND_TOTAL_LIMIT = 2 ** 31 - 1
+
+
+def _check_trend_domain(q_list) -> None:
+    """Refuse count series outside the int32 scan's exactness domain.
+
+    Both violations raise :class:`PallasDomainError` (not ``ValueError``)
+    so the metrics layer falls back to the numpy path for any input the
+    device path cannot take — the backends must never diverge on
+    acceptance."""
+    for s, q in enumerate(q_list):
+        if len(q) and int(q.min()) < 0:
+            raise PallasDomainError(
+                f"stream {s}: negative counts are outside the device trend "
+                "domain; use the numpy trend path")
+        if int(q.sum(dtype=np.int64)) > _TREND_TOTAL_LIMIT:
+            raise PallasDomainError(
+                f"stream {s}: total count exceeds the int32 prefix-sum "
+                f"domain (limit {_TREND_TOTAL_LIMIT}); use the numpy trend "
+                "path")
+
+
+def _window_tables(lengths: np.ndarray, window: int):
+    """Per-stream effective window + half-width (the sliding-mean clamp:
+    ``w_eff = clip(min(window, n), 1)``, matching the host semantics of
+    ``np.convolve(q, ones(w)/w, mode="same")`` with w clamped to n)."""
+    w_eff = np.maximum(np.minimum(window, lengths), 1).astype(np.int32)
+    half = ((w_eff - 1) // 2).astype(np.int32)
+    return w_eff, half
+
+
+@jax.jit
+def _trend_from_prefix(psum: jnp.ndarray, lengths: jnp.ndarray,
+                       w_eff: jnp.ndarray, half: jnp.ndarray) -> jnp.ndarray:
+    """Windowed sliding mean from inclusive prefix sums — two clamped
+    gathers + one divide, all on device (the XLA tail of the scan kernel,
+    as the scatter is to :func:`compact_mask`)."""
+    S, N = psum.shape
+    i = jnp.arange(N, dtype=jnp.int32)[None, :]
+    n = lengths.astype(jnp.int32)[:, None]
+    w = w_eff.astype(jnp.int32)[:, None]
+    h = half.astype(jnp.int32)[:, None]
+    hi = jnp.clip(i + h + 1, 0, n)          # exclusive-prefix index in [0, n]
+    lo = jnp.clip(i + h + 1 - w, 0, n)
+
+    def cex(j):                             # c[j] = sum(q[:j]); c[0] = 0
+        g = jnp.take_along_axis(psum, jnp.maximum(j - 1, 0), axis=1)
+        return jnp.where(j > 0, g, 0)
+
+    win = (cex(hi) - cex(lo)).astype(jnp.float32)    # int32-exact window sums
+    out = win / w.astype(jnp.float32)
+    return jnp.where(i < n, out, 0.0)
+
+
+def trend_scan_batched(qs, window: int):
+    """Windowed sliding-mean trends of S count series, ONE scan dispatch.
+
+    Parameters
+    ----------
+    qs : sequence of 1-D integer arrays
+        Per-second count series (ragged lengths allowed; empty series yield
+        all-zero rows).
+    window : int
+        Sliding-mean window in (simulated) seconds; per stream it clamps to
+        ``max(min(window, n), 1)`` — the host :func:`repro.streamsim.
+        metrics.sliding_mean` semantics.
+
+    Returns
+    -------
+    trend : jnp.ndarray, float32, shape (S, N)
+        Per-stream trends on the padded time axis; entries past a stream's
+        true length are 0.
+    lengths : np.ndarray, int64, shape (S,)
+        True series lengths (slice each row with ``trend[s, :lengths[s]]``).
+
+    Raises
+    ------
+    PallasDomainError
+        If any stream's total count exceeds the int32 prefix-sum domain
+        (2³¹ − 1). Window sums inside the domain are bit-exact; the final
+        divide is f32 (vs. the host path's f64 — well inside the metrics
+        layer's 1e-3 tolerance).
+    ValueError
+        If ``window < 1``, no streams are given, or counts are negative.
+    """
+    if window < 1:
+        raise ValueError("window must be >= 1")
+    q_list = [np.asarray(q).reshape(-1) for q in qs]
+    if not q_list:
+        raise ValueError("need at least one count series")
+    _check_trend_domain(q_list)
+    lengths = np.array([len(q) for q in q_list], np.int64)
+    N = max(int(-(-lengths.max(initial=1) // TREND_TILE) * TREND_TILE),
+            TREND_TILE)
+    qb = np.zeros((len(q_list), N), np.int32)
+    for s, q in enumerate(q_list):
+        qb[s, :len(q)] = q
+    psum = trend_scan_pallas(jnp.asarray(qb), interpret=not _on_tpu())
+    w_eff, half = _window_tables(lengths, window)
+    trend = _trend_from_prefix(psum, jnp.asarray(lengths),
+                               jnp.asarray(w_eff), jnp.asarray(half))
+    return trend, lengths
+
+
+def trend_scan(q: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Windowed sliding-mean trend of one count series, on device.
+
+    Single-stream convenience over :func:`trend_scan_batched` (a batch of
+    one). Returns a float32 ``(n,)`` device array; same domain guards.
+    """
+    trend, lengths = trend_scan_batched([q], window)
+    return trend[0, :int(lengths[0])]
+
+
+def trend_pair_stats(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All-pairs Pearson sufficient statistics of stacked trend series.
+
+    Parameters
+    ----------
+    x : jnp.ndarray, float32, shape (S, K)
+        Trend series on a common time grid (pad tails with 0 — zeros
+        contribute nothing to any statistic).
+
+    Returns
+    -------
+    sums : jnp.ndarray, float32, shape (S, 1)
+        ``sums[s] = Σ_t x[s, t]``.
+    gram : jnp.ndarray, float32, shape (S, S)
+        ``gram[a, b] = Σ_t x[a, t]·x[b, t]`` — with ``sums`` this is the
+        ``[Σx, Σy, Σxy, Σx², Σy²]`` bundle for every stream pair.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2 or x.shape[0] < 1:
+        raise ValueError("x must be (S, K) with S >= 1")
+    k = x.shape[1]
+    pad = (-k) % PAIR_TILE
+    if pad or k == 0:
+        x = jnp.concatenate(
+            [x, jnp.zeros((x.shape[0], pad or PAIR_TILE), x.dtype)], axis=1)
+    return pair_stats_pallas(x, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("n_points",))
+def _resample_uniform(x: jnp.ndarray, lengths: jnp.ndarray,
+                      n_points: int) -> jnp.ndarray:
+    """Linear resample of each (ragged) trend row onto a uniform grid of
+    ``n_points`` — the device mirror of ``np.interp(linspace(0, 1, K),
+    linspace(0, 1, n), row)``: lerp at position ``i·(n−1)/(K−1)``."""
+    n = lengths.astype(jnp.float32)[:, None]
+    i = jnp.arange(n_points, dtype=jnp.float32)[None, :]
+    scale = (n - 1.0) / max(n_points - 1, 1)   # n_points == 1 -> pos stays 0
+    pos = i * scale
+    j = jnp.floor(pos).astype(jnp.int32)
+    j = jnp.clip(j, 0, jnp.maximum(lengths.astype(jnp.int32)[:, None] - 2, 0))
+    frac = pos - j.astype(jnp.float32)
+    x0 = jnp.take_along_axis(x, j, axis=1)
+    x1 = jnp.take_along_axis(
+        x, jnp.minimum(j + 1, jnp.maximum(
+            lengths.astype(jnp.int32)[:, None] - 1, 0)), axis=1)
+    return x0 * (1.0 - frac) + x1 * frac
+
+
+def _corr_from_gram(gram, live, S: int) -> np.ndarray:
+    """Normalize a centered Gram matrix into the S×S Pearson matrix.
+
+    The single source of the output contract — exact symmetry, clip to
+    [-1, 1], unit diagonal for non-zero variance, NaN rows for empty or
+    zero-variance streams — shared by the device path below and the f64
+    numpy mirror (``repro.streamsim.metrics._corr_matrix_numpy``), so the
+    two backends can never drift apart on convention. ``live`` indexes the
+    non-empty streams ``gram`` covers within the full S×S output.
+    """
+    corr = np.full((S, S), np.nan)
+    g = np.asarray(gram, np.float64)
+    g = (g + g.T) / 2.0                       # exact symmetry
+    d = np.sqrt(np.clip(np.diag(g), 0.0, None))
+    denom = np.outer(d, d)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        sub = np.where(denom > 0, g / np.where(denom > 0, denom, 1.0),
+                       np.nan)
+    np.clip(sub, -1.0, 1.0, out=sub)
+    np.fill_diagonal(sub, np.where(d > 0, 1.0, np.nan))
+    corr[np.ix_(live, live)] = sub
+    return corr
+
+
+def trend_correlation_batched(qs, window: int,
+                              n_points: Optional[int] = None) -> np.ndarray:
+    """S×S trend-correlation matrix from ONE batched device dispatch chain.
+
+    The full Fig.-6 validation path on device: count series → prefix-sum
+    scan (:func:`trend_scan_batched`) → sliding-mean trends → linear
+    resample onto a common grid → mean-centering → all-pairs sufficient
+    statistics (:func:`trend_pair_stats`, one Gram-matrix dispatch). Only
+    the final ``O(S²)`` normalization runs on host, in float64.
+
+    Parameters
+    ----------
+    qs : sequence of 1-D integer arrays
+        Per-second count series, ragged lengths allowed.
+    window : int
+        Sliding-mean window (see :func:`trend_scan_batched`).
+    n_points : int, optional
+        Common resampling grid size. Defaults to the shortest non-empty
+        series' length — for S = 2 this reproduces the pairwise host
+        convention of :func:`repro.streamsim.metrics.
+        trend_correlation_from_counts` exactly.
+
+    Returns
+    -------
+    corr : np.ndarray, float64, shape (S, S)
+        Symmetric Pearson matrix, clipped to [-1, 1], diagonal exactly 1
+        for streams with non-zero trend variance. Rows/columns of empty or
+        zero-variance streams are NaN (matching the pairwise convention).
+
+    Raises
+    ------
+    PallasDomainError
+        Propagated from :func:`trend_scan_batched`; callers that want the
+        numpy fallback should catch it (``repro.streamsim.metrics.
+        trend_correlation_matrix`` does).
+    """
+    trend, lengths = trend_scan_batched(qs, window)
+    S = len(lengths)
+    live = np.flatnonzero(lengths > 0)
+    if len(live) == 0:
+        return np.full((S, S), np.nan)
+    K = int(n_points) if n_points is not None else int(lengths[live].min())
+    if K < 1:
+        raise ValueError("n_points must be >= 1")
+    z = _resample_uniform(trend[live], jnp.asarray(lengths[live]), K)
+    z = z - jnp.mean(z, axis=1, keepdims=True)
+    _, gram = trend_pair_stats(z)
+    return _corr_from_gram(gram, live, S)
+
+
 # ------------------------------------------------------------ flash decode
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  lengths: jnp.ndarray, *, block_s: int = 512) -> jnp.ndarray:
@@ -329,5 +572,6 @@ __all__ = [
     "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
     "flash_decode", "on_tpu", "stream_metrics", "stream_metrics_batched",
     "stream_sample", "stream_sample_batched", "stream_sample_ref",
-    "volatility_moments", "volatility_stats",
+    "trend_correlation_batched", "trend_pair_stats", "trend_scan",
+    "trend_scan_batched", "volatility_moments", "volatility_stats",
 ]

@@ -80,6 +80,28 @@ def stream_metrics_ref(ss: jnp.ndarray,
     return hist, mom
 
 
+def trend_scan_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """Trend-scan oracle: batched inclusive prefix sum over the time axis.
+
+    Same contract as ``trend_scan_pallas``: q (S, N) int32 count series
+    (zero-padded time tails). Returns ``psum int32 (S, N)`` with
+    ``psum[s, i] = Σ_{j <= i} q[s, j]``.
+    """
+    return jnp.cumsum(q.astype(jnp.int32), axis=1).astype(jnp.int32)
+
+
+def pair_stats_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pair-statistics oracle: per-stream sums + S×S Gram matrix.
+
+    Same contract as ``pair_stats_pallas``: x (S, K) f32 stacked trend
+    series (zero-padded time tails). Returns ``(sums f32 (S, 1),
+    gram f32 (S, S))`` with ``gram[a, b] = Σ_t x[a, t]·x[b, t]`` — the
+    sufficient statistics ``[Σx, Σy, Σxy, Σx², Σy²]`` for every pair.
+    """
+    xf = x.astype(jnp.float32)
+    return xf.sum(axis=1, keepdims=True), xf @ xf.T
+
+
 def volatility_ref(q: jnp.ndarray) -> jnp.ndarray:
     """Fused first two moments of the per-second count series.
 

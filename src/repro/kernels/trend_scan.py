@@ -1,0 +1,155 @@
+"""Pallas TPU kernels: device-resident trend scan + S×S pair statistics.
+
+Closes the host-side gap in the Fig.-6 validation path. After PR 2 the
+fused metrics engine (:mod:`repro.kernels.metrics_fused`) produces each
+stream's per-second counts ``q`` on device, but the *trend* (windowed
+sliding mean of ``q``) and the *trend correlation* (Pearson r between two
+streams' trends) still ran on host over a ``np.cumsum``. The two kernels
+here keep the whole chain — counts → prefix sums → trend → S×S correlation
+sufficient statistics — device-resident:
+
+``trend_scan_pallas``
+    Batched inclusive prefix sum over the time axis of ``(S, N)`` stacked
+    count series — the same single-pass scan-with-carry pattern as
+    :mod:`repro.kernels.compact`, lifted to a 2-D ``(stream, time-tile)``
+    grid: each grid step computes the tile-local cumsum (lane-wise
+    ``cumsum`` + row offsets) and adds the running carry held in SMEM
+    scratch, resetting the carry at each stream's first tile. Counts
+    accumulate in int32, so prefix sums are *exact* while a stream's total
+    record count stays below 2³¹ (enforced by the ops wrapper). The caller
+    turns prefix sums into the windowed sliding mean with two clamped
+    gathers and one divide (:func:`repro.kernels.ops.trend_scan`) — pure
+    XLA, no host round-trip, mirroring how ``compact`` pairs its scan with
+    one XLA scatter.
+
+``pair_stats_pallas``
+    Scan-with-carry accumulation of the Pearson sufficient statistics for
+    ALL S×S stream pairs in one dispatch: the grid walks time tiles of the
+    ``(S, K)`` trend matrix while the per-stream sums ``Σx`` and the Gram
+    matrix ``G[a, b] = Σ_t x_a[t]·x_b[t]`` stay VMEM-resident (their output
+    index maps ignore the tile index — the same residency trick as the
+    metrics engine's histogram). From ``(sums, G)`` every pair's five
+    sufficient statistics follow: ``Σx = sums[a]``, ``Σy = sums[b]``,
+    ``Σxy = G[a, b]``, ``Σx² = G[a, a]``, ``Σy² = G[b, b]``. The per-tile
+    update is one ``x_tile @ x_tileᵀ`` MXU matmul, so S×S cost rides the
+    systolic array instead of an S²-pair host loop.
+
+Numerical contract: the ops layer feeds ``pair_stats_pallas`` *centered*
+trends (mean removed on device), so the correlation reduces to
+``G[a,b] / √(G[a,a]·G[b,b])`` with no catastrophic ``K·Σxy − Σx·Σy``
+cancellation; f32 accumulation then lands within the metrics layer's 1e-3
+tolerance of the float64 host path. Zero padding (time tails, centered
+series) contributes exactly 0 to every statistic.
+
+Layout mirrors the other kernels: the time axis is padded to a multiple of
+the (8, 128) record tile (``trend_scan``) or of ``PAIR_TILE`` lanes
+(``pair_stats``); padded entries must be 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE   # time steps per trend-scan grid step
+PAIR_TILE = 4 * LANE    # time steps per pair-stats grid step
+
+
+def _scan_kernel(q_ref, psum_ref, carry_ref):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    del s  # the carry reset below only needs the tile index
+
+    @pl.when(i == 0)
+    def _reset():
+        carry_ref[0] = 0
+
+    q = q_ref[0].astype(jnp.int32)                   # (SUBLANE, LANE)
+    # tile-local inclusive cumsum in row-major time order: lane-wise
+    # inclusive scan, then per-row offsets from the row totals
+    row_incl = jnp.cumsum(q, axis=1)
+    row_tot = row_incl[:, -1:]
+    row_off = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+
+    carry = carry_ref[0]
+    psum_ref[0] = carry + row_off + row_incl
+    carry_ref[0] = carry + jnp.sum(q)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trend_scan_pallas(q: jnp.ndarray, *, interpret: bool = False):
+    """Batched inclusive prefix sum over stacked per-second count series.
+
+    q : (S, N) int32, N % TILE == 0 (pad time tails with 0).
+
+    Returns ``psum int32 (S, N)`` with
+    ``psum[s, i] = Σ_{j <= i} q[s, j]`` — exact while each stream's total
+    stays below 2³¹ (the ops wrapper guards this).
+    """
+    S, n = q.shape
+    assert n % TILE == 0, f"pad time steps to a multiple of {TILE}"
+    rows = n // LANE
+    q3 = q.reshape(S, rows, LANE)
+    grid = (S, rows // SUBLANE)
+    psum = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0))],
+        out_specs=pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(q3)
+    return psum.reshape(S, n)
+
+
+def _pair_kernel(x_ref, sums_ref, gram_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+
+    x = x_ref[...]                                   # (S, PAIR_TILE) f32
+    sums_ref[...] += jnp.sum(x, axis=1, keepdims=True)
+    gram_ref[...] += jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pair_stats_pallas(x: jnp.ndarray, *, interpret: bool = False):
+    """All-pairs Pearson sufficient statistics over stacked trend series.
+
+    x : (S, K) float32, K % PAIR_TILE == 0 (pad time tails with 0.0 —
+        zeros contribute nothing to any statistic).
+
+    Returns ``(sums f32 (S, 1), gram f32 (S, S))`` where
+    ``sums[s] = Σ_t x[s, t]`` and ``gram[a, b] = Σ_t x[a, t]·x[b, t]`` —
+    together the ``[Σx, Σy, Σxy, Σx², Σy²]`` bundle for every stream pair,
+    accumulated tile-by-tile with the (sums, gram) outputs VMEM-resident
+    across the time grid.
+    """
+    S, k = x.shape
+    assert k % PAIR_TILE == 0, f"pad time steps to a multiple of {PAIR_TILE}"
+    grid = (k // PAIR_TILE,)
+    sums, gram = pl.pallas_call(
+        _pair_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((S, PAIR_TILE), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+            pl.BlockSpec((S, S), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return sums, gram

@@ -25,9 +25,14 @@ from repro.streamsim.metrics import (  # noqa: F401
     per_second_counts,
     trend,
     trend_correlation,
+    trend_correlation_matrix,
     volatility,
 )
 from repro.streamsim.store import StreamStore  # noqa: F401
 from repro.streamsim.queue import StreamQueue  # noqa: F401
 from repro.streamsim.producer import Producer, VirtualClock, RealClock  # noqa: F401
-from repro.streamsim.controller import Controller, SimulationReport  # noqa: F401
+from repro.streamsim.controller import (  # noqa: F401
+    Controller,
+    FidelityReport,
+    SimulationReport,
+)

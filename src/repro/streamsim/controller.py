@@ -25,7 +25,8 @@ import numpy as np
 from repro.streamsim.datasets import make_stream
 from repro.streamsim.metrics import (StreamMetrics, Volatility,
                                      metrics_batched,
-                                     trend_correlation_from_counts)
+                                     trend_correlation_from_counts,
+                                     trend_correlation_matrix)
 from repro.streamsim.nsa import compression_factor, nsa, nsa_batched
 from repro.streamsim.preprocess import Stream, preprocess
 from repro.streamsim.producer import Producer, VirtualClock
@@ -53,12 +54,45 @@ class SimulationReport:
         return d
 
 
+@dataclasses.dataclass
+class FidelityReport:
+    """One sweep's Fig.-6 fidelity artifact from :meth:`Controller.run_many`.
+
+    ``trend_corr`` is the full S×S trend-correlation matrix over the
+    sweep's streams — every dataset's original stream followed by every
+    dataset's simulated stream at ``max_range`` — computed by
+    :func:`repro.streamsim.metrics.trend_correlation_matrix` from ONE
+    batched dispatch (on the pallas backend the whole counts → trend →
+    correlation chain stays on device). ``labels[i]`` names row/column
+    ``i`` (``"<dataset>/original"`` or ``"<dataset>/sim<max_range>"``).
+
+    Matrix entries for empty / zero-variance streams are NaN in memory and
+    serialize to ``null`` in :meth:`to_json` (bare ``NaN`` tokens are not
+    valid JSON and would break non-Python consumers of the artifact).
+    """
+
+    max_range: int
+    window_s: int
+    labels: List[str]
+    trend_corr: List[List[float]]
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["trend_corr"] = [[None if v != v else v for v in row]
+                           for row in self.trend_corr]
+        return d
+
+
 class Controller:
     def __init__(self, store_dir: str, metrics_dir: Optional[str] = None):
         self.store = StreamStore(store_dir)
         self.metrics_dir = Path(metrics_dir or (Path(store_dir) / "_metrics"))
         self.metrics_dir.mkdir(parents=True, exist_ok=True)
+        self.fidelity_dir = self.metrics_dir / "fidelity"
         self._metrics_seq = itertools.count()
+        #: the per-sweep S×S fidelity matrices from the latest
+        #: :meth:`run_many` call (also persisted under ``fidelity_dir``)
+        self.last_fidelity: List[FidelityReport] = []
 
     # ----------------------------------------------------- (1) simulate/run
     def prepare(self, dataset: str, *, scale: float = 1.0, seed: int = 0,
@@ -147,11 +181,38 @@ class Controller:
             queue_size: int = 64, backend: str = "auto") -> SimulationReport:
         """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
 
-        ``consumer`` drains the queue and returns its own metrics dict
-        (function (2): collecting workload metrics of the SPS). All report
-        statistics — original and simulated volatility plus the trend
-        correlation — come from ONE batched metrics-engine call, so each
-        stream is read once instead of once per statistic."""
+        Parameters
+        ----------
+        dataset : str
+            Dataset name (see :func:`repro.streamsim.datasets.make_stream`).
+        max_range : int
+            Simulated time range for NSA.
+        consumer : callable
+            Drains the queue and returns its own metrics dict (function
+            (2): collecting workload metrics of the SPS).
+        scale, seed :
+            Synthetic-dataset shape parameters (store-cache keyed).
+        queue_size : int, default 64
+            Bounded-queue capacity; the producer honours backpressure.
+        backend : {"auto", "numpy", "pallas"}
+            Passed through to NSA and the metrics engine. NSA output is
+            bit-identical across backends; metric moments agree within
+            1e-3; out-of-domain inputs fall back to numpy automatically.
+
+        Returns
+        -------
+        SimulationReport
+            All report statistics — original and simulated volatility plus
+            the trend correlation — come from ONE batched metrics-engine
+            call, so each stream is read once instead of once per
+            statistic. The report is also persisted as JSON (function (3):
+            the metrics repository).
+
+        Raises
+        ------
+        RuntimeError
+            If the producer reports a non-zero fault status.
+        """
         t0 = time.perf_counter()
         original = self.prepare(dataset, scale=scale, seed=seed)
         t_pre = time.perf_counter() - t0
@@ -170,7 +231,8 @@ class Controller:
     def run_many(self, datasets: Sequence[str], max_ranges: Sequence[int],
                  consumer: Callable[[StreamQueue], Dict], *,
                  scale: float = 1.0, seed: int = 0, queue_size: int = 64,
-                 backend: str = "auto") -> List[SimulationReport]:
+                 backend: str = "auto",
+                 fidelity_window_s: int = 60) -> List[SimulationReport]:
         """The Tables 1-3 scenario sweep (datasets × time ranges) as batched
         dispatches instead of ``len(datasets) * len(max_ranges)`` sequential
         :meth:`run` calls.
@@ -179,11 +241,44 @@ class Controller:
         :func:`nsa_batched` dispatch; every scenario's statistics (original
         + simulated volatility, trend correlation) then come from ONE
         batched metrics-engine call covering all original and simulated
-        streams. Emits one :class:`SimulationReport` per (dataset,
-        max_range) scenario, in ``for dataset: for max_range`` order, each
-        equivalent to the per-scenario :meth:`run` report (``nsa_s`` holds
-        the batch's shared NSA wall time for scenarios simulated together,
-        0.0 for store cache hits)."""
+        streams.
+
+        Parameters
+        ----------
+        datasets : sequence of str
+            Dataset names (see :func:`repro.streamsim.datasets.make_stream`).
+        max_ranges : sequence of int
+            Simulated time ranges — the sweep grid is their cross product
+            with ``datasets``.
+        consumer : callable
+            Drains the queue per scenario and returns its metrics dict (the
+            SPS-side workload).
+        scale, seed, queue_size :
+            As in :meth:`run`.
+        backend : {"auto", "numpy", "pallas"}
+            Passed through to NSA, the metrics engine, and the fidelity
+            matrix; every backend yields equivalent reports.
+        fidelity_window_s : int, default 60
+            Sliding-mean window for the per-sweep fidelity matrices.
+
+        Returns
+        -------
+        list of SimulationReport
+            One per (dataset, max_range) scenario, in ``for dataset: for
+            max_range`` order, each equivalent to the per-scenario
+            :meth:`run` report (``nsa_s`` holds the batch's shared NSA wall
+            time for scenarios simulated together, 0.0 for store cache
+            hits).
+
+        Notes
+        -----
+        As a side product, each sweep's full S×S trend-correlation matrix
+        over [originals..., sims@max_range...] — the Fig.-6 fidelity
+        check — is computed by ONE batched
+        :func:`~repro.streamsim.metrics.trend_correlation_matrix` dispatch
+        per ``max_range`` (device-resident on the pallas backend), saved as
+        JSON under ``fidelity_dir``, and exposed on :attr:`last_fidelity`.
+        """
         datasets = list(datasets)
         max_ranges = list(max_ranges)
         originals, t_pre = {}, {}
@@ -221,6 +316,22 @@ class Controller:
         om = dict(zip(datasets, ms[:len(datasets)]))
         sm = dict(zip(scenarios, ms[len(datasets):]))
 
+        # Fig.-6 fidelity: per sweep (max_range), the S×S trend-correlation
+        # matrix over [originals..., sims@mr...] from ONE batched dispatch
+        # (device-resident on the pallas backend — no per-pair host loop)
+        self.last_fidelity = []
+        for mr in max_ranges:
+            labels = [f"{d}/original" for d in datasets] + \
+                [f"{d}/sim{mr}" for d in datasets]
+            matrix = trend_correlation_matrix(
+                [om[d].counts for d in datasets] +
+                [sm[(d, mr)].counts for d in datasets],
+                window_s=fidelity_window_s, backend=backend)
+            fr = FidelityReport(mr, fidelity_window_s, labels,
+                                matrix.tolist())
+            self.save_fidelity(fr)
+            self.last_fidelity.append(fr)
+
         reports = []
         for d, mr in scenarios:
             consumer_metrics, t_prod = self._produce_consume(
@@ -244,6 +355,31 @@ class Controller:
         with open(path, "w") as f:
             json.dump(report.to_json(), f, indent=2, default=_np_default)
         return path
+
+    def save_fidelity(self, report: FidelityReport) -> Path:
+        """Persist one sweep's S×S fidelity matrix under ``fidelity_dir``
+        (kept out of ``metrics_dir`` proper so :meth:`list_metrics` keeps
+        its one-file-per-scenario contract)."""
+        self.fidelity_dir.mkdir(parents=True, exist_ok=True)
+        stem = f"fidelity_max{report.max_range}_{int(time.time() * 1e3)}"
+        path = self.fidelity_dir / \
+            f"{stem}_{next(self._metrics_seq):06d}.json"
+        while path.exists():
+            path = self.fidelity_dir / \
+                f"{stem}_{next(self._metrics_seq):06d}.json"
+        with open(path, "w") as f:
+            json.dump(report.to_json(), f, indent=2, default=_np_default)
+        return path
+
+    def list_fidelity(self) -> List[Path]:
+        return sorted(self.fidelity_dir.glob("*.json"))
+
+    def load_fidelity(self) -> List[Dict]:
+        out = []
+        for p in self.list_fidelity():
+            with open(p) as f:
+                out.append(json.load(f))
+        return out
 
     def list_metrics(self) -> List[Path]:
         return sorted(self.metrics_dir.glob("*.json"))

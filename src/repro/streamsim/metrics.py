@@ -27,9 +27,20 @@ ranges — through ONE batched engine dispatch, which is what
 ``Controller.run`` / ``Controller.run_many`` use so the whole reporting path
 re-reads each stream once instead of ~4 times.
 
-:func:`trend` is an O(n) cumulative-sum sliding mean on every backend
-(window sums via two prefix-sum lookups), replacing the seed's
-O(n·window) ``np.convolve``.
+:func:`trend` is an O(n) cumulative-sum sliding mean (window sums via two
+prefix-sum lookups), replacing the seed's O(n·window) ``np.convolve``. On
+the pallas backend the cumsum is the device scan kernel
+(:mod:`repro.kernels.trend_scan`); only the O(time_range) count series
+crosses host for the domain guard — the O(records) histogramming and the
+scan itself stay on device.
+
+:func:`trend_correlation_matrix` evaluates the Fig.-6 "similar trend"
+claim for ALL S×S stream pairs at once: on the pallas backend the whole
+chain — counts → prefix-sum scan → sliding-mean trends → resample →
+centered Gram matrix — is one batched device dispatch chain (no per-pair
+host loop); the numpy backend mirrors it in float64. Out-of-domain inputs
+(totals past the int32 prefix-sum limit) fall back to numpy via
+:class:`repro.kernels.ops.PallasDomainError`, like every other metric.
 """
 
 from __future__ import annotations
@@ -117,8 +128,27 @@ def per_second_counts(stream: Stream, time_range: Optional[int] = None,
                       backend: str = "numpy") -> np.ndarray:
     """Arrival counts q_i per (simulated or original) second.
 
-    Bit-exact across backends (int64 out; the device path counts in int32,
-    exact within the engine's guarded domain).
+    Parameters
+    ----------
+    stream : Stream
+    time_range : int, optional
+        Series length. ``None`` infers it: the NSA ``max_range``
+        convention (``max scale_stamp + 1``) for simulated streams, the
+        spanned seconds for originals. A ``time_range`` smaller than the
+        largest scale stamp *expands* (seed bincount semantics) rather
+        than mis-binning.
+    use_scale_stamp : bool, optional
+        Force bucketing by ``scale_stamp`` (simulated) or by wall time
+        (original); ``None`` picks by whether ``scale_stamp`` is set.
+    backend : {"numpy", "pallas", "auto"}
+        ``"pallas"`` counts through the fused device engine
+        (:func:`repro.kernels.ops.stream_metrics`, int32 accumulation —
+        exact up to 2³¹ per bucket, guarded); ``"auto"`` is pallas on TPU.
+
+    Returns
+    -------
+    np.ndarray, int64, shape (time_range,)
+        **Bit-exact across backends.**
     """
     buckets, tr = _bucket_series(stream, time_range, use_scale_stamp)
     if _resolve_backend(backend) == "pallas" and tr > 0:
@@ -130,7 +160,24 @@ def per_second_counts(stream: Stream, time_range: Optional[int] = None,
 
 def volatility(stream: Stream, time_range: Optional[int] = None,
                *, backend: str = "numpy") -> Volatility:
-    """Average / Variance / StdVariance of q_i (paper formulas (2)-(4))."""
+    """Average / Variance / StdVariance of q_i (paper formulas (2)-(4)).
+
+    Parameters
+    ----------
+    stream, time_range :
+        As in :func:`per_second_counts`.
+    backend : {"numpy", "pallas", "auto"}
+        ``"numpy"`` reduces exact f64 moments on host; ``"pallas"`` reads
+        the ``[Σq, Σq²]`` pair the fused engine produced in the same
+        record pass as the histogram (f32 reduction — agrees with numpy
+        within 1e-3 relative).
+
+    Returns
+    -------
+    Volatility
+        ``average``, ``variance``, ``std_variance`` over the count series,
+        plus the ``time_range`` they were normalized by.
+    """
     buckets, tr = _bucket_series(stream, time_range, None)
     if _resolve_backend(backend) == "pallas" and tr > 0:
         from repro.kernels import ops
@@ -147,12 +194,34 @@ def metrics_batched(streams: Sequence[Stream],
                     backend: str = "auto") -> List[StreamMetrics]:
     """Counts + volatility for S streams from ONE batched engine call.
 
-    ``time_ranges[i]`` is the i-th stream's series length (None infers it:
-    the NSA ``max_range`` convention for simulated streams, the spanned
-    seconds for originals). On the pallas backend all S histograms and
-    moment pairs come from a single 2-D-grid kernel dispatch padded to the
-    largest time range — trailing zero buckets perturb neither counts nor
-    moments; per-stream statistics divide by the true range.
+    Parameters
+    ----------
+    streams : sequence of Stream
+        Ragged lengths, mixed simulated/original, and empty/degenerate
+        members are all allowed.
+    time_ranges : sequence of int or None
+        Per-stream series length (``None`` infers it — see
+        :func:`per_second_counts`). Must align with ``streams``.
+    use_scale_stamps : sequence of bool or None, optional
+        Per-stream ``use_scale_stamp`` override.
+    backend : {"numpy", "pallas", "auto"}
+        On ``"pallas"`` all S histograms and moment pairs come from a
+        single 2-D-grid kernel dispatch padded to the largest time range —
+        trailing zero buckets perturb neither counts nor moments;
+        per-stream statistics divide by the true range. Inputs outside the
+        engine's int32 domain fall back to numpy wholesale (the ops layer
+        raises :class:`~repro.kernels.ops.PallasDomainError`, caught
+        here).
+
+    Returns
+    -------
+    list of StreamMetrics
+        ``counts`` bit-exact across backends; ``volatility`` within 1e-3.
+
+    Raises
+    ------
+    ValueError
+        If ``streams`` and ``time_ranges`` lengths differ.
     """
     if len(streams) != len(time_ranges):
         raise ValueError("streams and time_ranges must align")
@@ -209,10 +278,44 @@ def trend(stream: Stream, window_s: int = 600,
           *, backend: str = "numpy") -> np.ndarray:
     """Moving-average trend of the per-second counts (the Figs. 1-3 curves).
 
-    The window mean is computed by the cumsum sliding mean on every backend;
-    ``backend`` selects where the underlying counts come from.
+    Parameters
+    ----------
+    stream : Stream
+        Simulated (``scale_stamp`` set) or original stream.
+    window_s : int, default 600
+        Sliding-mean window in (simulated) seconds; clamped per series to
+        ``max(min(window_s, n), 1)``.
+    time_range : int, optional
+        Series length; ``None`` infers it (see :func:`per_second_counts`).
+    backend : {"numpy", "pallas", "auto"}
+        ``"numpy"`` computes counts + an O(n) host cumsum sliding mean in
+        float64. ``"pallas"`` chains the fused metrics engine into the
+        device prefix-sum scan kernel (:func:`repro.kernels.ops.
+        trend_scan`) — window sums are int32-exact, the final divide is
+        f32, so the result agrees with numpy within 1e-3 relative.
+        ``"auto"`` is pallas on TPU, numpy otherwise.
+
+    Returns
+    -------
+    np.ndarray, float64, shape (time_range,)
+
+    Notes
+    -----
+    Inputs past the device domain (total counts ≥ 2³¹) raise
+    :class:`~repro.kernels.ops.PallasDomainError` inside the ops layer;
+    this function catches it and falls back to the numpy path, so callers
+    never see silently wrong trends.
     """
-    q = per_second_counts(stream, time_range, backend=backend)
+    buckets, tr = _bucket_series(stream, time_range, None)
+    if _resolve_backend(backend) == "pallas" and tr > 0:
+        from repro.kernels import ops
+        try:
+            hist, _ = ops.stream_metrics(buckets, tr)
+            return np.asarray(ops.trend_scan(np.asarray(hist),
+                                             max(window_s, 1)), np.float64)
+        except ops.PallasDomainError:
+            pass  # counts outside the int32 scan domain -> host path
+    q = np.bincount(buckets, minlength=tr)
     return sliding_mean(q.astype(np.float64), window_s)
 
 
@@ -238,8 +341,114 @@ def trend_correlation_from_counts(qa: np.ndarray, qb: np.ndarray,
 
 def trend_correlation(a: Stream, b: Stream, window_s: int = 60,
                       *, backend: str = "numpy") -> float:
-    """Trend correlation of two streams (counts computed here; when counts
-    are already in hand use :func:`trend_correlation_from_counts`)."""
-    return trend_correlation_from_counts(
-        per_second_counts(a, backend=backend),
-        per_second_counts(b, backend=backend), window_s)
+    """Trend correlation of two streams.
+
+    When counts are already in hand use
+    :func:`trend_correlation_from_counts` (numpy) or
+    :func:`trend_correlation_matrix` (batched, either backend).
+
+    Parameters
+    ----------
+    a, b : Stream
+    window_s : int, default 60
+        Sliding-mean window for both trends.
+    backend : {"numpy", "pallas", "auto"}
+        ``"pallas"`` runs the device chain of
+        :func:`trend_correlation_matrix` on the pair (one batched dispatch,
+        agreeing with numpy within 1e-3); out-of-domain inputs fall back to
+        the numpy path automatically.
+
+    Returns
+    -------
+    float
+        Pearson r in [-1, 1]; NaN when either series is empty or has zero
+        trend variance.
+    """
+    qa = per_second_counts(a, backend=backend)
+    qb = per_second_counts(b, backend=backend)
+    if _resolve_backend(backend) == "pallas":
+        from repro.kernels import ops
+        try:
+            return float(ops.trend_correlation_batched(
+                [qa, qb], max(window_s, 1))[0, 1])
+        except ops.PallasDomainError:
+            pass  # totals outside the int32 scan domain -> host path
+    return trend_correlation_from_counts(qa, qb, window_s)
+
+
+# ------------------------------------------------- S x S correlation matrix
+def _corr_matrix_numpy(counts: Sequence[np.ndarray], window_s: int,
+                       n_points: Optional[int]) -> np.ndarray:
+    """Float64 host mirror of :func:`repro.kernels.ops.
+    trend_correlation_batched`: same resample-to-common-grid convention,
+    same NaN/clip/diagonal contract."""
+    from repro.kernels.ops import _corr_from_gram
+    trends = [sliding_mean(np.asarray(q, np.float64), window_s)
+              for q in counts]
+    S = len(trends)
+    live = [s for s in range(S) if len(trends[s])]
+    if not live:
+        return np.full((S, S), np.nan)
+    K = int(n_points) if n_points is not None else \
+        min(len(trends[s]) for s in live)
+    if K < 1:
+        raise ValueError("n_points must be >= 1")
+    grid = np.linspace(0.0, 1.0, K)
+    z = np.stack([np.interp(grid, np.linspace(0.0, 1.0, len(trends[s])),
+                            trends[s]) for s in live])
+    z -= z.mean(axis=1, keepdims=True)
+    return _corr_from_gram(z @ z.T, np.asarray(live), S)
+
+
+def trend_correlation_matrix(counts: Sequence[np.ndarray],
+                             window_s: int = 60, *,
+                             n_points: Optional[int] = None,
+                             backend: str = "auto") -> np.ndarray:
+    """Pearson trend-correlation matrix for ALL S×S count-series pairs.
+
+    The batched form of the Fig.-6 fidelity check: every series' sliding-
+    mean trend is resampled onto a common uniform grid (``n_points``
+    points, default the shortest non-empty series' length), mean-centered,
+    and correlated against every other.
+
+    Parameters
+    ----------
+    counts : sequence of 1-D integer arrays
+        Per-second count series (e.g. ``StreamMetrics.counts`` rows from
+        :func:`metrics_batched`), ragged lengths allowed.
+    window_s : int, default 60
+        Sliding-mean window applied to every series (must be >= 1).
+    n_points : int, optional
+        Common resampling grid size; defaults to the shortest non-empty
+        series' length, which for two series reproduces the pairwise
+        :func:`trend_correlation_from_counts` convention.
+    backend : {"numpy", "pallas", "auto"}
+        ``"pallas"`` runs counts → prefix-sum scan → trends → resample →
+        centered S×S Gram through ONE batched device dispatch chain
+        (:func:`repro.kernels.ops.trend_correlation_batched`) — no
+        per-pair host loop and no host cumsum. ``"numpy"`` mirrors the
+        convention in float64; the backends agree within 1e-3.
+
+    Returns
+    -------
+    np.ndarray, float64, shape (S, S)
+        Symmetric, clipped to [-1, 1], diagonal exactly 1 for series with
+        non-zero trend variance; rows/columns of empty or zero-variance
+        series are NaN.
+
+    Raises
+    ------
+    ValueError
+        If ``window_s < 1`` or ``n_points < 1``. Device-domain violations
+        (totals ≥ 2³¹) do NOT raise here — they fall back to numpy.
+    """
+    if window_s < 1:
+        raise ValueError("window_s must be >= 1")
+    counts = [np.asarray(q).reshape(-1) for q in counts]
+    if _resolve_backend(backend) == "pallas" and counts:
+        from repro.kernels import ops
+        try:
+            return ops.trend_correlation_batched(counts, window_s, n_points)
+        except ops.PallasDomainError:
+            pass  # totals outside the int32 scan domain -> host path
+    return _corr_matrix_numpy(counts, window_s, n_points)

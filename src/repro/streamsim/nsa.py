@@ -140,15 +140,46 @@ def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
         multiple_mode: str = "time", backend: str = "numpy") -> Stream:
     """Vectorized NSA (Algorithm 1): normalize + sample -> simulated stream Ds.
 
-    Returns a new :class:`Stream` whose ``scale_stamp`` is filled and whose
-    records are the systematic sample; per-second volatility statistics match
-    the original stream's (paper §5.2).
+    Parameters
+    ----------
+    stream : Stream
+        Preprocessed (chronological) original stream.
+    max_range : int
+        Target simulated time range in seconds (the paper's ``max``); must
+        be positive.
+    keep : {"systematic", "first"}
+        In-bucket sampling rule — Bresenham-even systematic selection (the
+        paper text) or keep-first-k (the pseudocode-literal reading). The
+        device kernel only implements ``"systematic"``; ``"first"`` always
+        takes the numpy path.
+    multiple_mode : {"time", "records"}
+        How the compression multiple is derived (see the module
+        docstring's note on the paper's ``Len(B)`` ambiguity).
+    backend : {"numpy", "pallas", "auto"}
+        ``"pallas"`` runs normalize → keep-mask → compaction → gather
+        device-resident (two fused Pallas dispatches + one XLA scatter);
+        ``"auto"`` picks pallas on TPU, numpy otherwise.
 
-    ``backend`` selects the implementation (see the module docstring):
-    ``"numpy"`` host path, ``"pallas"`` device-resident path (bit-identical
-    output), ``"auto"`` = pallas on TPU else numpy. The device kernel only
-    implements the systematic keep rule; ``keep="first"`` always takes the
-    numpy path.
+    Returns
+    -------
+    Stream
+        The simulated stream: ``scale_stamp`` filled, records the
+        systematic sample; per-second volatility statistics match the
+        original's (paper §5.2). **Bit-identical across backends** — the
+        kernel snaps its f32 buckets to exact f64 host tables.
+
+    Raises
+    ------
+    ValueError
+        If ``max_range <= 0`` or ``keep``/``multiple_mode`` is unknown.
+
+    Notes
+    -----
+    Streams outside the device kernels' exactness domain (int32 keep-rule
+    overflow, ``max_range`` past the ±1-snap guarantee) raise
+    :class:`repro.kernels.ops.PallasDomainError` inside the ops layer;
+    this function catches it and silently falls back to the numpy path, so
+    the bit-identity contract survives out-of-domain inputs.
     """
     if max_range <= 0:
         raise ValueError("max_range must be positive")
@@ -209,11 +240,36 @@ def nsa_batched(streams: Dict[str, Stream], max_range: int, *,
                 backend: str = "auto") -> Dict[str, Stream]:
     """NSA over many concurrent device streams — the IoT-realistic shape.
 
-    On the pallas backend all S keep masks come from ONE batched kernel
-    dispatch (2-D grid over streams x record tiles) instead of S sequential
-    ones; each stream is then compacted and gathered as in :func:`nsa`.
-    Off-TPU ``"auto"`` falls back to per-stream numpy. Output is
-    bit-identical to ``{k: nsa(s, max_range)}`` for every backend.
+    Parameters
+    ----------
+    streams : dict of str -> Stream
+        Named streams to compress together.
+    max_range : int
+        Shared simulated time range (positive).
+    multiple_mode : {"time", "records"}
+        As in :func:`nsa`.
+    backend : {"auto", "numpy", "pallas"}
+        On ``"pallas"`` all S keep masks come from ONE batched kernel
+        dispatch (2-D grid over streams × record tiles) instead of S
+        sequential ones; each stream is then compacted and gathered as in
+        :func:`nsa`. Off-TPU ``"auto"`` falls back to per-stream numpy.
+
+    Returns
+    -------
+    dict of str -> Stream
+        **Bit-identical** to ``{k: nsa(s, max_range)}`` for every backend.
+
+    Raises
+    ------
+    ValueError
+        If ``max_range <= 0``.
+
+    Notes
+    -----
+    Batches containing an empty stream, and batches where any member falls
+    outside the device kernels' domain
+    (:class:`repro.kernels.ops.PallasDomainError`), fall back to the
+    per-stream numpy path wholesale — never silently wrong output.
     """
     if max_range <= 0:
         raise ValueError("max_range must be positive")

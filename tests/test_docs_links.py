@@ -1,0 +1,47 @@
+"""CI link check: every intra-repo link in docs/**/*.md and README.md must
+resolve — both the target file/directory and (when given) its heading
+anchor. Runs dependency-free so the docs CI job needs only pytest."""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+PAGES = sorted(REPO.glob("docs/**/*.md")) + [REPO / "README.md"]
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _anchors(md_path: Path):
+    """GitHub-style slugs for every heading in a markdown file."""
+    slugs = set()
+    for line in md_path.read_text().splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            slug = re.sub(r"[^a-z0-9 \-]", "", m.group(1).strip().lower())
+            slugs.add(slug.replace(" ", "-"))
+    return slugs
+
+
+def _links():
+    for page in PAGES:
+        for target in _LINK.findall(page.read_text()):
+            if not target.startswith(("http://", "https://", "mailto:")):
+                yield pytest.param(page, target,
+                                   id=f"{page.relative_to(REPO)}:{target}")
+
+
+@pytest.mark.parametrize("page,target", list(_links()))
+def test_intra_repo_link_resolves(page, target):
+    path, _, anchor = target.partition("#")
+    dest = page if not path else (page.parent / path).resolve()
+    assert dest.exists(), f"{page.name} links to missing {path}"
+    if anchor and dest.suffix == ".md":
+        assert anchor in _anchors(dest), \
+            f"{page.name} links to missing anchor #{anchor} in {dest.name}"
+
+
+def test_docs_pages_exist():
+    for name in ("architecture.md", "kernels.md", "benchmarks.md",
+                 "backends.md"):
+        assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"

@@ -158,7 +158,9 @@ class TestTrend:
         s = _edge_streams()["dense"]
         t_np = trend(s, 60, backend="numpy")
         t_pl = trend(s, 60, backend="pallas")
-        np.testing.assert_allclose(t_np, t_pl, rtol=1e-9)
+        # window sums are int32-exact on device; the final divide is f32,
+        # so backends agree within the documented 1e-3 (observed ~1e-7)
+        np.testing.assert_allclose(t_np, t_pl, rtol=1e-3, atol=1e-5)
         assert len(t_np) == len(per_second_counts(s))
 
 
