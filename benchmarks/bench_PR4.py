@@ -1,0 +1,182 @@
+"""PR 4 trajectory rows: single-dispatch full-sweep NSA + batched replay.
+
+Three rows quantify what collapsing the Tables 1-3 sweep buys:
+
+- ``sweep_single_dispatch_3x6`` — the full (3 datasets × 6 time ranges)
+  scenario grid simulated end-to-end (normalize → sample → mask → compact
+  → gather, producing all 18 simulated streams): ONE range-padded
+  ``nsa_sweep`` launch (1 sample dispatch + 1 batched compaction) vs the
+  per-range path it replaces (6 ``nsa_batched`` dispatches + 18 per-stream
+  compactions — the pre-PR-4 ``Controller.run_many`` composition). This is
+  the NSA-stage analogue of PR 2's ``volatility/batched_sweep_3x6`` row,
+  which collapsed the same grid one pipeline stage later (metrics). The CI
+  regression smoke fails if the single-dispatch path is ever slower than
+  the per-range path (guarding the range-padding overhead on small
+  sweeps).
+- ``nsa_range_padded_64x256k`` — kernel-level range padding: 64 rows
+  cycling through mixed ``max_range`` values in ONE dispatch vs one
+  per-range ``stream_sample_batched`` dispatch per distinct range.
+- ``producer_multiqueue_replay`` — the PSDA replay in the
+  ``Controller.run_many`` shape: ONE merged virtual-time loop feeding 18
+  bounded queues drained by concurrent consumers, vs 18 sequential
+  producer-thread/consumer replays (the pre-PR-4 ``_produce_consume``
+  loop). Thread-scheduling sensitive — a trajectory row, not a CI gate.
+
+All rows are min-of-reps; reduced scales carry an ``@`` suffix so trend
+tooling never mixes incommensurable sizes. Full scale is the TPU target —
+off-TPU the Pallas legs run in interpret mode, whose per-grid-step
+emulation cost grows with the batched row count, so the CPU rows measure
+small sweeps: exactly the regime the CI padding-overhead guard cares
+about.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import List
+
+from repro.kernels import ops
+from repro.streamsim import (Producer, StreamQueue, VirtualClock,
+                             make_stream, nsa_batched, preprocess)
+from repro.streamsim.nsa import nsa_sweep
+from repro.streamsim.producer import MultiQueueProducer
+from repro.streamsim.queue import QueueGroup
+
+TIME_RANGES = (600, 1200, 1800, 2400, 3000, 3600)
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+QUEUE_SIZE = 65_536
+
+
+def _tmin(fn, reps=3):
+    """(result, min-of-reps seconds) — min is robust to scheduler noise."""
+    out, best = fn(), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        best = min(best, time.perf_counter() - t0)
+        assert r == out, "non-deterministic benchmark result"
+    return out, best
+
+
+def _consume(queue) -> int:
+    return sum(len(b) for b in queue)
+
+
+def _replay_multi(sims) -> int:
+    """ONE merged virtual-time loop + one concurrent consumer per queue."""
+    group = QueueGroup(sims, maxsize=QUEUE_SIZE)
+    mp = MultiQueueProducer(sims, group.queues, clock=VirtualClock())
+    seen = {}
+    consumers = [threading.Thread(
+        target=lambda k=k: seen.__setitem__(k, _consume(group[k])),
+        daemon=True) for k in sims]
+    producer = threading.Thread(target=mp.run, daemon=True)
+    for th in consumers + [producer]:
+        th.start()
+    for th in consumers + [producer]:
+        th.join()
+    return sum(seen.values())
+
+
+def _replay_sequential(sims) -> int:
+    """The pre-PR-4 shape: per scenario, a producer thread feeding a
+    bounded queue drained by the caller (Controller._produce_consume)."""
+    total = 0
+    for sim in sims.values():
+        queue = StreamQueue(maxsize=QUEUE_SIZE)
+        producer = Producer(sim, queue, clock=VirtualClock())
+        th = threading.Thread(target=producer.run, daemon=True)
+        th.start()
+        total += _consume(queue)
+        th.join()
+    return total
+
+
+def run(csv: List[str]) -> None:
+    # full scale only makes sense on TPU (off-TPU the kernels run in
+    # interpret mode); the @scale suffix records what actually ran
+    if ops.on_tpu():
+        scale, tag = {"sogouq": 1.0, "traffic": 1.0, "userbehavior": 0.25}, ""
+    else:
+        s = 0.0002 if QUICK else 0.0005
+        scale = {k: s for k in ("sogouq", "traffic", "userbehavior")}
+        tag = f"@scale{s}"
+    streams = {name: preprocess(make_stream(name, scale=sc, seed=0))
+               for name, sc in scale.items()}
+    reps = 3 if QUICK else 5
+
+    # --- the full-grid NSA sweep: 1 launch vs 6 + 18 ----------------------
+    def _single_dispatch():
+        sims = nsa_sweep(streams, TIME_RANGES, backend="pallas")
+        return sum(len(s) for s in sims.values())
+
+    def _per_range():
+        total = 0
+        for mr in TIME_RANGES:
+            batch = nsa_batched(streams, mr, backend="pallas")
+            total += sum(len(s) for s in batch.values())
+        return total
+
+    got_new, dt_new = _tmin(_single_dispatch, reps=reps)
+    got_old, dt_old = _tmin(_per_range, reps=reps)
+    assert got_new == got_old, "sweep and per-range paths must produce " \
+        f"identical simulated row totals ({got_new} vs {got_old})"
+    csv.append(
+        f"PR4/sweep_single_dispatch_3x6{tag},{dt_new*1e6:.0f},"
+        f"scenarios=18;nsa_dispatches=1;"
+        f"per_range_path_us={dt_old*1e6:.0f};"
+        f"speedup={dt_old/max(dt_new, 1e-9):.1f}x")
+
+    # --- kernel-level range padding: 64 mixed-range rows, one dispatch ----
+    import numpy as np
+    rng = np.random.default_rng(0)
+    S = 8 if QUICK else 64
+    ns = 262_144 if ops.on_tpu() else (1_024 if QUICK else 4_096)
+    ktag = "" if (S, ns) == (64, 262_144) else f"@{S}x{ns}"
+    ts = [np.sort(rng.uniform(0, 86_400.0, ns)) for _ in range(S)]
+    ranges = [TIME_RANGES[i % len(TIME_RANGES)] for i in range(S)]
+    mults = [86_400.0 / mr for mr in ranges]
+
+    def _padded():
+        _, keep, _ = ops.stream_sample_batched(ts, ranges, mults)
+        return int(np.asarray(keep).sum())
+
+    def _grouped():
+        kept = 0
+        for mr in sorted(set(ranges)):
+            rows = [i for i, r in enumerate(ranges) if r == mr]
+            _, keep, _ = ops.stream_sample_batched(
+                [ts[i] for i in rows], mr, [mults[i] for i in rows])
+            kept += int(np.asarray(keep).sum())
+        return kept
+
+    got_p, dt_p = _tmin(_padded, reps=reps)
+    got_g, dt_g = _tmin(_grouped, reps=reps)
+    assert got_p == got_g
+    csv.append(
+        f"PR4/nsa_range_padded_64x256k{ktag},{dt_p*1e6:.0f},"
+        f"shape={S}x{ns};ranges={len(set(ranges))};dispatches=1;"
+        f"grouped_{len(set(ranges))}_dispatches_us={dt_g*1e6:.0f}")
+
+    # --- replay: one merged loop + concurrent drains vs 18 sequential -----
+    # host-side (no Pallas leg), so it affords a larger stream than the
+    # interpret-mode NSA rows: per-bucket transport work has to dominate
+    # thread bookkeeping for the loop structure to be measurable
+    if ops.on_tpu():
+        rscale, rtag = scale, tag
+    else:
+        rs = 0.002 if QUICK else 0.005
+        rscale = {k: rs for k in scale}
+        rtag = f"@scale{rs}"
+    rstreams = {name: preprocess(make_stream(name, scale=sc, seed=0))
+                for name, sc in rscale.items()}
+    sims = nsa_sweep(rstreams, TIME_RANGES, backend="numpy")
+    got_m, dt_m = _tmin(lambda: _replay_multi(sims), reps=reps)
+    got_s, dt_s = _tmin(lambda: _replay_sequential(sims), reps=reps)
+    assert got_m == got_s
+    csv.append(
+        f"PR4/producer_multiqueue_replay{rtag},{dt_m*1e6:.0f},"
+        f"scenarios={len(sims)};loops=1;"
+        f"sequential_{len(sims)}_loops_us={dt_s*1e6:.0f}")

@@ -1,0 +1,49 @@
+"""Bench-regression smoke gate for the single-dispatch sweep.
+
+Reads a ``BENCH_PR4.json`` produced by ``benchmarks/run.py`` and fails
+(exit 1) if the ``PR4/sweep_single_dispatch_3x6`` row is slower than the
+per-range path it replaced (its ``per_range_path_us`` derived field) —
+the guard against the range-padding overhead regressing small sweeps,
+which is exactly the regime quick-mode CI measures. Structural
+regressions (an accidental per-range dispatch loop, a padding blowup)
+show up as multiples, far outside benchmark noise; the currently measured
+quick-mode margin is >3x.
+
+Usage: ``python benchmarks/check_regression.py path/to/BENCH_PR4.json``
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+GATED_ROW = "PR4/sweep_single_dispatch_3x6"
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        rows = json.load(f)
+    row = next((r for r in rows
+                if r["name"].split("@")[0] == GATED_ROW), None)
+    if row is None:
+        print(f"FAIL: no {GATED_ROW} row in {path}", file=sys.stderr)
+        return 1
+    m = re.search(r"per_range_path_us=(\d+(?:\.\d+)?)", row["derived"])
+    if m is None:
+        print(f"FAIL: {row['name']} carries no per_range_path_us baseline",
+              file=sys.stderr)
+        return 1
+    new, baseline = float(row["us_per_call"]), float(m.group(1))
+    verdict = "OK" if new <= baseline else "FAIL"
+    print(f"{verdict}: {row['name']} = {new:.0f}us vs per-range baseline "
+          f"{baseline:.0f}us ({baseline / max(new, 1e-9):.1f}x)")
+    if new > baseline:
+        print("single-dispatch sweep is SLOWER than the per-range path it "
+              "replaces — range-padding overhead regression", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR4.json"))

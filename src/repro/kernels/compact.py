@@ -15,6 +15,12 @@ bandwidth pass and keeps the whole NSA chain on device.
 
 Layout mirrors the other kernels: records padded to a multiple of the
 (8, 128) tile; padded entries must carry mask ``0``.
+
+``compact_positions_batched_pallas`` lifts the same scan to a 2-D
+``(row, record-tile)`` grid — the carry resets at each row's first tile
+(the :mod:`repro.kernels.trend_scan` pattern), so R rows' keep masks
+compact in ONE dispatch with per-row totals. This is the compaction leg of
+the range-padded NSA sweep: every (dataset × max_range) scenario is a row.
 """
 
 from __future__ import annotations
@@ -81,3 +87,57 @@ def compact_positions_pallas(mask: jnp.ndarray, *, interpret: bool = False):
         interpret=interpret,
     )(m2)
     return pos.reshape(n), total
+
+
+def _kernel_batched(mask_ref, pos_ref, total_ref, carry_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _reset():                                    # new row: fresh carry
+        carry_ref[0] = 0
+
+    m = mask_ref[0].astype(jnp.int32)                # (SUBLANE, LANE) 0/1
+    row_incl = jnp.cumsum(m, axis=1)
+    row_tot = row_incl[:, -1:]
+    row_off = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+
+    carry = carry_ref[0]
+    pos_ref[0] = carry + row_incl - m + row_off
+    carry_ref[0] = carry + jnp.sum(m)
+    total_ref[0, 0] = carry_ref[0]                   # row's last tile wins
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_positions_batched_pallas(mask: jnp.ndarray, *,
+                                     interpret: bool = False):
+    """Batched mask compaction: R rows' scans in ONE 2-D-grid dispatch.
+
+    mask: (R, N) int32 0/1, N % TILE == 0 (pad record tails with 0).
+
+    Returns ``(pos int32 (R, N), totals int32 (R, 1))`` — per row the same
+    contract as :func:`compact_positions_pallas`: ``pos[r, i]`` is the
+    exclusive prefix sum of row ``r``'s mask and ``totals[r]`` its set-entry
+    count. The SMEM carry resets at each row's first record tile, so rows
+    are independent (bit-identical to R sequential single-row dispatches).
+    """
+    R, n = mask.shape
+    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    rows = n // LANE
+    m3 = mask.reshape(R, rows, LANE)
+    grid = (R, rows // SUBLANE)
+    pos, totals = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, SUBLANE, LANE), lambda r, i: (r, i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANE, LANE), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, 1), lambda r, i: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(m3)
+    return pos.reshape(R, n), totals

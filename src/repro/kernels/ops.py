@@ -64,16 +64,23 @@ def _pad_to(x: jnp.ndarray, mult: int, value) -> Tuple[jnp.ndarray, int]:
 
 
 # --------------------------------------------------------------------- NSA
-def _nsa_tables(t64: np.ndarray, max_range: int, multiple: float):
+def _nsa_tables(t64: np.ndarray, max_range: int, multiple: float,
+                width: Optional[int] = None):
     """Exact per-bucket tables + kernel inputs for one sorted stream.
 
-    Computes (rebased f32 timestamps, starts, counts, ktab, (t_min, 1/span))
-    where the tables come from the *float64 host formula* — the identical
-    expression ``(t - t_min) / span * max_range`` that
-    :func:`repro.streamsim.nsa.scale_stamps` floors — so the kernel's
-    +-1-snapped scale stamps are bit-identical to the numpy path. O(n)
-    vectorized host work for ``v`` plus O(max_range log n) searchsorted;
-    everything per-record then runs on device.
+    Computes (rebased f32 timestamps, starts, counts, ktab,
+    (t_min, 1/span, n_buckets)) where the tables come from the *float64
+    host formula* — the identical expression ``(t - t_min) / span *
+    max_range`` that :func:`repro.streamsim.nsa.scale_stamps` floors — so
+    the kernel's +-1-snapped scale stamps are bit-identical to the numpy
+    path. O(n) vectorized host work for ``v`` plus O(max_range log n)
+    searchsorted; everything per-record then runs on device.
+
+    ``width`` (default ``max_range``) pads the table axis for range-padded
+    sweeps mixing rows at different ``max_range``: tail buckets in
+    ``[max_range, width)`` get ``starts = n``, ``counts = 0`` and a ZERO
+    keep budget, so they can never claim a record or keep anything — the
+    row's compute is fully determined by its ``n_buckets`` scalar.
     """
     from repro.kernels.stream_sample import MAX_RANGE_LIMIT
     if max_range > MAX_RANGE_LIMIT:
@@ -81,21 +88,27 @@ def _nsa_tables(t64: np.ndarray, max_range: int, multiple: float):
             f"max_range {max_range} exceeds {MAX_RANGE_LIMIT}: the +-1 "
             "bucket snap no longer bounds the f32 normalize error; use the "
             "numpy NSA path")
+    width = max_range if width is None else width
+    assert width >= max_range
     n = len(t64)
     t_min, t_max = float(t64[0]), float(t64[-1])
     span = t_max - t_min
     if span <= 0.0:
         # degenerate stream (all timestamps equal): everything is bucket 0,
         # so bucket 0 spans [0, n) and every later bucket starts at n
-        starts = np.full(max_range, n, np.int32)
+        starts = np.full(width, n, np.int32)
         starts[0] = 0
         inv_span = 0.0
     else:
         v = (t64 - t_min) / span * max_range
-        starts = np.searchsorted(v, np.arange(max_range)).astype(np.int32)
+        starts = np.full(width, n, np.int32)
+        starts[:max_range] = np.searchsorted(v, np.arange(max_range))
         inv_span = 1.0 / span
-    counts = np.diff(np.append(starts, n)).astype(np.int32)
-    ktab = np.clip(np.rint(counts / multiple), 1, None).astype(np.int32)
+    counts = np.zeros(width, np.int32)
+    counts[:max_range] = np.diff(np.append(starts[:max_range], n))
+    ktab = np.zeros(width, np.int32)
+    ktab[:max_range] = np.clip(
+        np.rint(counts[:max_range] / multiple), 1, None)
     prod = (counts.astype(np.int64) - 1).clip(0) * ktab.astype(np.int64)
     if prod.max(initial=0) >= 2 ** 31:
         raise KeepRuleOverflow(
@@ -103,7 +116,7 @@ def _nsa_tables(t64: np.ndarray, max_range: int, multiple: float):
             f"k={ktab[prod.argmax()]} overflows the int32 keep rule; "
             "use the numpy NSA path for this stream")
     t32 = (t64 - t_min).astype(np.float32)
-    return t32, starts, counts, ktab, (0.0, inv_span)
+    return t32, starts, counts, ktab, (0.0, inv_span, float(max_range))
 
 
 def stream_sample(t: jnp.ndarray, max_range: int,
@@ -147,17 +160,24 @@ def stream_sample_ref(t: jnp.ndarray, max_range: int, multiple: float):
     return ss[0], keep[0].astype(bool)
 
 
-def stream_sample_batched(ts, max_range: int, multiples):
+def stream_sample_batched(ts, max_range, multiples):
     """Batched fused NSA inner loop: S streams, ONE kernel dispatch.
 
     ts        : sequence of S sorted 1-D float64 timestamp arrays (ragged
                 lengths allowed) or an (S, N) array.
+    max_range : int, or a length-S sequence of per-row time ranges — the
+                range-padded sweep form: every row normalizes into its OWN
+                bucket count while the tables are padded to the sweep's
+                maximum (tail buckets carry a zero keep budget), so one
+                dispatch covers the whole (stream × max_range) grid.
     multiples : per-stream multiple (scalar broadcasts).
 
     Pads every stream to the common TILE-aligned length and runs the 2-D-grid
     kernel once — replacing S sequential :func:`stream_sample` dispatches.
     Returns (scale_stamp int32 (S, N), keep bool (S, N), lengths int (S,));
-    padded tail entries have keep == False.
+    padded tail entries have keep == False. Per row the outputs are
+    bit-identical to the single-stream :func:`stream_sample` at that row's
+    ``max_range``, whatever the other rows' ranges are.
     """
     ts = [np.asarray(t, np.float64) for t in ts]
     S = len(ts)
@@ -166,23 +186,27 @@ def stream_sample_batched(ts, max_range: int, multiples):
     lengths = np.array([len(t) for t in ts])
     if np.any(lengths == 0):
         raise ValueError("batched path requires non-empty streams")
+    ranges = np.broadcast_to(np.asarray(max_range, np.int64), (S,))
+    if np.any(ranges <= 0):
+        raise ValueError("max_range entries must be positive")
+    width = int(ranges.max())
     mults = np.broadcast_to(np.asarray(multiples, np.float64), (S,))
     N = int(-(-lengths.max() // TILE) * TILE)
     t_b = np.empty((S, N), np.float32)
-    starts_b = np.empty((S, max_range), np.int32)
-    counts_b = np.empty((S, max_range), np.int32)
-    k_b = np.empty((S, max_range), np.int32)
-    scal_b = np.empty((S, 2), np.float32)
+    starts_b = np.empty((S, width), np.int32)
+    counts_b = np.empty((S, width), np.int32)
+    k_b = np.empty((S, width), np.int32)
+    scal_b = np.empty((S, 3), np.float32)
     for s, t64 in enumerate(ts):
         t32, starts, counts, ktab, scalars = _nsa_tables(
-            t64, max_range, float(mults[s]))
+            t64, int(ranges[s]), float(mults[s]), width)
         t_b[s, :len(t32)] = t32
         t_b[s, len(t32):] = t32[-1]          # pad into the last bucket
         starts_b[s], counts_b[s], k_b[s] = starts, counts, ktab
         scal_b[s] = scalars
     ss, keep = stream_sample_pallas(
         jnp.asarray(t_b), jnp.asarray(starts_b), jnp.asarray(counts_b),
-        jnp.asarray(k_b), jnp.asarray(scal_b), max_range,
+        jnp.asarray(k_b), jnp.asarray(scal_b), width,
         interpret=not _on_tpu())
     valid = jnp.arange(N)[None, :] < jnp.asarray(lengths)[:, None]
     return ss, keep.astype(bool) & valid, lengths
@@ -210,6 +234,46 @@ def compact_mask(mask: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
     idx = jnp.full((n,), n, jnp.int32).at[tgt].set(
         jnp.arange(n, dtype=jnp.int32), mode="drop")
     return idx, int(total[0])
+
+
+def compact_mask_batched(mask: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                     np.ndarray]:
+    """Kept-record indices for R stacked keep masks, ONE device dispatch.
+
+    mask : (R, N) boolean/0-1 keep masks; rows may describe streams of
+    different true lengths — the caller masks padded tails to 0 (the
+    :func:`stream_sample_batched` ``valid`` mask already does).
+
+    Chains the batched Pallas scan (per-row exclusive prefix sums with the
+    SMEM carry reset at each row's first tile) with ONE XLA scatter over the
+    whole (R, N) grid — replacing R sequential :func:`compact_mask`
+    dispatches.
+
+    Returns ``(idx int32 (R, N), totals int64 (R,))``: ``idx[r, :totals[r]]``
+    are row ``r``'s set-entry indices in ascending order; the tail is the
+    sentinel ``N`` (the input width — TILE padding is internal and never
+    shows up in the output). Per row this matches :func:`compact_mask` on
+    that row exactly: same kept indices, same sentinel convention.
+    """
+    from repro.kernels.compact import compact_positions_batched_pallas
+    mask = jnp.asarray(mask)
+    if mask.ndim != 2:
+        raise ValueError(f"mask must be (R, N), got shape {mask.shape}")
+    R, n = mask.shape
+    if n == 0 or R == 0:
+        return jnp.zeros((R, n), jnp.int32), np.zeros(R, np.int64)
+    pad = (-n) % TILE
+    mi = mask.astype(jnp.int32)
+    if pad:
+        mi = jnp.concatenate(
+            [mi, jnp.zeros((R, pad), jnp.int32)], axis=1)
+    pos, totals = compact_positions_batched_pallas(mi,
+                                                   interpret=not _on_tpu())
+    tgt = jnp.where(mask.astype(bool), pos[:, :n], n)
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (R, n))
+    idx = jnp.full((R, n), n, jnp.int32).at[rows, tgt].set(cols, mode="drop")
+    return idx, np.asarray(totals, np.int64).reshape(-1)
 
 
 # -------------------------------------------------------- metrics engine
@@ -570,8 +634,9 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 __all__ = [
     "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
-    "flash_decode", "on_tpu", "stream_metrics", "stream_metrics_batched",
-    "stream_sample", "stream_sample_batched", "stream_sample_ref",
-    "trend_correlation_batched", "trend_pair_stats", "trend_scan",
-    "trend_scan_batched", "volatility_moments", "volatility_stats",
+    "compact_mask_batched", "flash_decode", "on_tpu", "stream_metrics",
+    "stream_metrics_batched", "stream_sample", "stream_sample_batched",
+    "stream_sample_ref", "trend_correlation_batched", "trend_pair_stats",
+    "trend_scan", "trend_scan_batched", "volatility_moments",
+    "volatility_stats",
 ]

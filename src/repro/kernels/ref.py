@@ -23,23 +23,28 @@ def stream_sample_ref(t: jnp.ndarray, starts: jnp.ndarray,
 
     Same contract as ``stream_sample_pallas``: t (S, N) f32 sorted per-stream
     timestamps; ``starts``/``counts``/``ktab`` the exact (S, max_range)
-    per-bucket tables; ``scalars`` (S, 2) rows of (t_min, 1/span). The f32
-    bucket guess is snapped by +-1 to the bucket containing the record index
-    (the tables are exact, so the snapped stamp matches the f64 host path).
-    Keep rule (Bresenham-even, k of c records survive):
+    per-bucket tables (``max_range`` is the padded table width); ``scalars``
+    (S, 3) rows of (t_min, 1/span, n_buckets) — each row normalizes into its
+    OWN ``n_buckets`` bucket count, so rows at different time ranges batch
+    together. The f32 bucket guess is snapped by +-1 to the bucket containing
+    the record index (the tables are exact, so the snapped stamp matches the
+    f64 host path). Keep rule (Bresenham-even, k of c records survive):
         keep(rank) = (rank * k) mod c < k
     """
+    del max_range  # table width only; rows carry their own bucket count
     S, n = t.shape
     t_min = scalars[:, 0:1]
     inv_span = scalars[:, 1:2]
-    g = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
-    g = jnp.clip(g, 0, max_range - 1)
+    nb_f = scalars[:, 2:3]
+    nb = nb_f.astype(jnp.int32)
+    g = jnp.floor((t - t_min) * inv_span * nb_f).astype(jnp.int32)
+    g = jnp.clip(g, 0, nb - 1)
     gidx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (S, n))
     s_g = jnp.take_along_axis(starts, g, axis=1)
     c_g = jnp.take_along_axis(counts, g, axis=1)
     g = g + (gidx >= s_g + c_g).astype(jnp.int32) \
           - (gidx < s_g).astype(jnp.int32)
-    ss = jnp.clip(g, 0, max_range - 1)
+    ss = jnp.clip(g, 0, nb - 1)
     start = jnp.take_along_axis(starts, ss, axis=1)
     c = jnp.take_along_axis(counts, ss, axis=1)
     k = jnp.take_along_axis(ktab, ss, axis=1)

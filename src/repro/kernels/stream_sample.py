@@ -5,8 +5,20 @@ One ``pallas_call`` with a 2-D grid ``(stream, record-tile)`` replaces S
 sequential dispatches: grid step ``(s, i)`` normalizes an (8, 128)-record
 tile of stream ``s`` while that stream's per-bucket tables (starts, counts,
 per-bucket keep budget ``k``; ``max_range`` <= 3600 entries, <= 14 KiB each)
-and scalars (t_min, 1/span) ride along in VMEM. The single-stream path is
-just S == 1.
+and scalars (t_min, 1/span, n_buckets) ride along in VMEM. The
+single-stream path is just S == 1.
+
+Range-padded batching: each row carries its OWN bucket count ``n_buckets``
+in its scalar triple, so one dispatch can mix rows simulated at different
+``max_range`` values — the whole (dataset × max_range) sweep of the paper's
+Tables 1-3 collapses to a single kernel launch. The table axis is padded to
+the sweep's maximum bucket count; tail buckets past a row's ``n_buckets``
+never influence that row (the normalize clamps to ``n_buckets - 1`` and the
+wrapper pads tails with ``starts = n``, ``counts = 0``, zero keep budget).
+``n_buckets`` is shipped as float32, which represents every admissible
+bucket count exactly (``MAX_RANGE_LIMIT = 2**20 < 2**24``), and the f32
+normalize multiply is bit-identical to the static-``max_range`` form the
+per-range dispatch used.
 
 Exactness: the float32 normalize can land a record one bucket off the
 float64 host answer near an edge, so the kernel *snaps*: the wrapper ships
@@ -50,17 +62,20 @@ MAX_RANGE_LIMIT = 1 << 20
 
 def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
             keep_ref, *, max_range: int):
+    del max_range  # table width only; each row carries its own bucket count
     i = pl.program_id(1)
     t = t_ref[0].astype(jnp.float32)             # (SUBLANE, LANE)
     t_min = scalar_ref[0, 0]
     inv_span = scalar_ref[0, 1]                  # 1/span, precomputed
+    nb_f = scalar_ref[0, 2]                      # this row's bucket count
+    nb = nb_f.astype(jnp.int32)                  # f32-exact below 2**24
     starts = starts_ref[0]                       # (max_range,) int32
     counts = counts_ref[0]
     ktab = k_ref[0]
 
     # --- normalize: paper formula (1), floored to the simulated second ---
-    g = jnp.floor((t - t_min) * inv_span * max_range).astype(jnp.int32)
-    g = jnp.clip(g, 0, max_range - 1)
+    g = jnp.floor((t - t_min) * inv_span * nb_f).astype(jnp.int32)
+    g = jnp.clip(g, 0, nb - 1)
 
     base = i * TILE
     row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 0)
@@ -72,7 +87,7 @@ def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
     c_g = jnp.take(counts, g, axis=0)
     g = g + (gidx >= s_g + c_g).astype(jnp.int32) \
           - (gidx < s_g).astype(jnp.int32)
-    ss = jnp.clip(g, 0, max_range - 1)
+    ss = jnp.clip(g, 0, nb - 1)
 
     # --- systematic keep: k of c survive, Bresenham-even ---
     start = jnp.take(starts, ss, axis=0)
@@ -90,17 +105,23 @@ def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
                          counts: jnp.ndarray, ktab: jnp.ndarray,
                          scalars: jnp.ndarray, max_range: int, *,
                          interpret: bool = False):
-    """Batched fused NSA inner loop.
+    """Batched fused NSA inner loop (range-padded rows).
 
     t       : (S, N) float32 per-stream rebased timestamps, sorted along the
               record axis, N % TILE == 0 (pad tails with any finite value —
               padded keep bits are garbage; the wrapper masks by length).
-    starts  : (S, max_range) int32 exact per-bucket start offsets.
-    counts  : (S, max_range) int32 exact per-bucket sizes.
-    ktab    : (S, max_range) int32 per-bucket keep budgets.
-    scalars : (S, 2) float32 rows of (t_min, 1/span).
+    starts  : (S, max_range) int32 exact per-bucket start offsets; tail
+              entries past a row's ``n_buckets`` must be the record count.
+    counts  : (S, max_range) int32 exact per-bucket sizes (0 past
+              ``n_buckets``).
+    ktab    : (S, max_range) int32 per-bucket keep budgets (0 past
+              ``n_buckets`` — the masked tail keeps nothing).
+    scalars : (S, 3) float32 rows of (t_min, 1/span, n_buckets) with
+              ``n_buckets <= max_range`` the row's own bucket count.
 
-    Returns (scale_stamp int32 (S, N), keep int32 (S, N)).
+    ``max_range`` is only the padded TABLE width; per-row compute uses the
+    ``n_buckets`` scalar, so rows at different time ranges batch into one
+    dispatch. Returns (scale_stamp int32 (S, N), keep int32 (S, N)).
     """
     S, n = t.shape
     assert n % TILE == 0, f"pad records to a multiple of {TILE}"
@@ -117,7 +138,7 @@ def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
-            pl.BlockSpec((1, 2), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, 3), lambda s, i: (s, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),

@@ -18,7 +18,13 @@ from repro.streamsim.datasets import (  # noqa: F401
     userbehavior,
 )
 from repro.streamsim.preprocess import Stream, preprocess  # noqa: F401
-from repro.streamsim.nsa import nsa, nsa_batched, nsa_paper, scale_stamps  # noqa: F401
+from repro.streamsim.nsa import (  # noqa: F401
+    nsa,
+    nsa_batched,
+    nsa_paper,
+    nsa_sweep,
+    scale_stamps,
+)
 from repro.streamsim.metrics import (  # noqa: F401
     StreamMetrics,
     metrics_batched,
@@ -29,8 +35,13 @@ from repro.streamsim.metrics import (  # noqa: F401
     volatility,
 )
 from repro.streamsim.store import StreamStore  # noqa: F401
-from repro.streamsim.queue import StreamQueue  # noqa: F401
-from repro.streamsim.producer import Producer, VirtualClock, RealClock  # noqa: F401
+from repro.streamsim.queue import QueueGroup, StreamQueue  # noqa: F401
+from repro.streamsim.producer import (  # noqa: F401
+    MultiQueueProducer,
+    Producer,
+    RealClock,
+    VirtualClock,
+)
 from repro.streamsim.controller import (  # noqa: F401
     Controller,
     FidelityReport,

@@ -27,10 +27,11 @@ from repro.streamsim.metrics import (StreamMetrics, Volatility,
                                      metrics_batched,
                                      trend_correlation_from_counts,
                                      trend_correlation_matrix)
-from repro.streamsim.nsa import compression_factor, nsa, nsa_batched
+from repro.streamsim.nsa import compression_factor, nsa, nsa_sweep
 from repro.streamsim.preprocess import Stream, preprocess
-from repro.streamsim.producer import Producer, VirtualClock
-from repro.streamsim.queue import StreamQueue
+from repro.streamsim.producer import (MultiQueueProducer, Producer,
+                                      VirtualClock)
+from repro.streamsim.queue import QueueGroup, StreamQueue
 from repro.streamsim.store import StreamStore
 
 
@@ -154,6 +155,49 @@ class Controller:
         return ({**consumer_metrics, **queue.stats(), **producer.stats()},
                 t_prod)
 
+    def _produce_consume_many(self, sims: Dict, consumer, queue_size: int):
+        """Batched PSDA leg of :meth:`run_many`: ONE
+        :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
+        loop interleaves every scenario's buckets; each scenario's consumer
+        drains its own bounded queue in its own thread (shared backpressure
+        makes concurrent drains mandatory — a full sibling queue stalls the
+        whole loop). Returns ``({scenario: merged stats}, shared wall
+        time)`` with per-scenario stats equivalent to sequential
+        :meth:`_produce_consume` calls."""
+        group = QueueGroup(sims, maxsize=queue_size)
+        producer = MultiQueueProducer(sims, group.queues,
+                                      clock=VirtualClock())
+        status = [None]
+        results: Dict = {}
+        errors: List = []
+
+        def _produce():
+            status[0] = producer.run()
+
+        def _consume(key):
+            try:
+                results[key] = consumer(group[key])
+            except Exception as exc:  # keep the producer loop drainable
+                errors.append(exc)
+                for _ in group[key]:
+                    pass
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=_produce, daemon=True)]
+        threads += [threading.Thread(target=_consume, args=(key,),
+                                     daemon=True) for key in sims]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        t_prod = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        if status[0] != 0:
+            raise RuntimeError("producer reported fault status")
+        return ({key: {**results[key], **group[key].stats(),
+                       **producer.stats(key)} for key in sims}, t_prod)
+
     def _report(self, dataset: str, max_range: int, original: Stream,
                 sim: Stream, om: StreamMetrics, sm: StreamMetrics,
                 timings, consumer_metrics: Dict) -> SimulationReport:
@@ -237,11 +281,16 @@ class Controller:
         dispatches instead of ``len(datasets) * len(max_ranges)`` sequential
         :meth:`run` calls.
 
-        Per ``max_range``, all store-missing datasets go through ONE
-        :func:`nsa_batched` dispatch; every scenario's statistics (original
-        + simulated volatility, trend correlation) then come from ONE
-        batched metrics-engine call covering all original and simulated
-        streams.
+        ALL store-missing scenarios — the full grid, not one batch per
+        ``max_range`` — go through ONE range-padded :func:`nsa_sweep`
+        dispatch; every scenario's statistics (original + simulated
+        volatility, trend correlation) then come from ONE batched
+        metrics-engine call covering all original and simulated streams;
+        and every scenario replays through ONE
+        :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
+        loop feeding per-scenario bounded queues (each scenario's consumer
+        drains its queue in its own thread). The 3×6 sweep therefore costs
+        1 NSA dispatch + 1 replay loop instead of 6 + 18.
 
         Parameters
         ----------
@@ -252,7 +301,10 @@ class Controller:
             with ``datasets``.
         consumer : callable
             Drains the queue per scenario and returns its metrics dict (the
-            SPS-side workload).
+            SPS-side workload). Scenario consumers run CONCURRENTLY (one
+            thread per scenario — the batched replay's shared backpressure
+            requires it), so a consumer shared across scenarios must be
+            thread-safe.
         scale, seed, queue_size :
             As in :meth:`run`.
         backend : {"auto", "numpy", "pallas"}
@@ -266,8 +318,9 @@ class Controller:
         list of SimulationReport
             One per (dataset, max_range) scenario, in ``for dataset: for
             max_range`` order, each equivalent to the per-scenario
-            :meth:`run` report (``nsa_s`` holds the batch's shared NSA wall
-            time for scenarios simulated together, 0.0 for store cache
+            :meth:`run` report (``nsa_s`` holds the sweep's shared NSA wall
+            time for scenarios simulated together and ``produce_s`` the
+            shared replay-loop wall time; ``nsa_s`` is 0.0 for store cache
             hits).
 
         Notes
@@ -287,27 +340,25 @@ class Controller:
             originals[d] = self.prepare(d, scale=scale, seed=seed)
             t_pre[d] = time.perf_counter() - t0
 
+        scenarios = [(d, mr) for d in datasets for mr in max_ranges]
+        missing = [(d, mr) for d, mr in scenarios
+                   if not self.store.exists(f"{d}__sim{mr}")]
         sims: Dict[tuple, Stream] = {}
         nsa_s: Dict[tuple, float] = {}
-        for mr in max_ranges:
-            missing = [d for d in datasets
-                       if not self.store.exists(f"{d}__sim{mr}")]
-            t0 = time.perf_counter()
-            if missing:
-                batch = nsa_batched({d: originals[d] for d in missing}, mr,
-                                    backend=backend)
-                t_batch = time.perf_counter() - t0
-                for d in missing:
-                    self.store.put(f"{d}__sim{mr}", batch[d],
-                                   {"max_range": mr})
-            else:
-                batch, t_batch = {}, 0.0
-            for d in datasets:
-                sims[(d, mr)] = batch.get(d) if d in batch else \
-                    self.store.get(f"{d}__sim{mr}")
-                nsa_s[(d, mr)] = t_batch if d in batch else 0.0
-
-        scenarios = [(d, mr) for d in datasets for mr in max_ranges]
+        t0 = time.perf_counter()
+        if missing:
+            # the whole store-missing grid in ONE range-padded dispatch
+            batch = nsa_sweep(originals, max_ranges, pairs=missing,
+                              backend=backend)
+            t_sweep = time.perf_counter() - t0
+            for (d, mr), sim in batch.items():
+                self.store.put(f"{d}__sim{mr}", sim, {"max_range": mr})
+        else:
+            batch, t_sweep = {}, 0.0
+        for sc in scenarios:
+            sims[sc] = batch[sc] if sc in batch else \
+                self.store.get(f"{sc[0]}__sim{sc[1]}")
+            nsa_s[sc] = t_sweep if sc in batch else 0.0
         all_streams = [originals[d] for d in datasets] + \
             [sims[s] for s in scenarios]
         all_ranges: List[Optional[int]] = [None] * len(datasets) + \
@@ -332,13 +383,16 @@ class Controller:
             self.save_fidelity(fr)
             self.last_fidelity.append(fr)
 
+        # ONE virtual-time replay loop for the whole grid (per-scenario
+        # bounded queues; each scenario's consumer drains concurrently)
+        all_metrics, t_prod = self._produce_consume_many(
+            sims, consumer, queue_size)
         reports = []
         for d, mr in scenarios:
-            consumer_metrics, t_prod = self._produce_consume(
-                sims[(d, mr)], consumer, queue_size)
             reports.append(self._report(
                 d, mr, originals[d], sims[(d, mr)], om[d], sm[(d, mr)],
-                (t_pre[d], nsa_s[(d, mr)], t_prod), consumer_metrics))
+                (t_pre[d], nsa_s[(d, mr)], t_prod),
+                all_metrics[(d, mr)]))
         return reports
 
     # -------------------------------------------------- (3) metrics manager

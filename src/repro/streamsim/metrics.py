@@ -18,9 +18,11 @@ Every metric takes the same ``backend="numpy|pallas|auto"`` knob as
   pass over the record tiles, int32-exact counts.
 - ``"auto"`` — pallas on TPU, numpy otherwise.
 
-Counts are **bit-exact** across backends; derived moments (average /
-variance / σ) agree within 1e-3 relative tolerance (the device reduces in
-f32).
+Counts are **bit-exact** across backends; the engine's raw ``[Σq, Σq²]``
+moments agree with exact f64 within ~1e-5 relative (pairwise-block + Kahan
+f32 reduction in the kernel); derived moments (average / variance / σ)
+keep the documented 1e-3 relative tolerance (the variance subtraction can
+amplify the moment error).
 
 :func:`metrics_batched` evaluates S streams — possibly with different time
 ranges — through ONE batched engine dispatch, which is what

@@ -42,6 +42,12 @@ Implementations
   numpy path (the kernel snaps its f32 buckets to exact f64 tables).
 - :func:`nsa_batched` — S streams in ONE kernel dispatch
   (``ops.stream_sample_batched``) instead of S sequential ones.
+- :func:`nsa_sweep` — the full (stream × max_range) scenario grid in ONE
+  kernel dispatch: per-scenario bucket tables are padded to the sweep's
+  maximum bucket count (masked tail buckets with zero keep budget) and
+  every scenario's keep mask compacts through one batched scan, so the
+  whole Tables 1-3 sweep costs one normalize→sample→mask→compact→gather
+  chain instead of one per ``max_range``.
 
 Backend selection rules
 -----------------------
@@ -61,7 +67,7 @@ Every backend produces bit-identical output for the same arguments.
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -296,6 +302,105 @@ def nsa_batched(streams: Dict[str, Stream], max_range: int, *,
     return {name: _compact_gather(streams[name], ss_b[s],
                                   keep_b[s, :lengths[s]])
             for s, name in enumerate(names)}
+
+
+def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
+              pairs: Optional[Sequence[Tuple[str, int]]] = None,
+              multiple_mode: str = "time",
+              backend: str = "auto") -> Dict[Tuple[str, int], Stream]:
+    """NSA over the full (stream × max_range) scenario grid — ONE dispatch.
+
+    The Tables 1-3 sweep shape: every ``(name, max_range)`` scenario becomes
+    one ROW of a single range-padded kernel launch. Rows simulated at a
+    smaller ``max_range`` than the sweep's maximum get their bucket tables
+    padded to the maximum with masked tail buckets (``counts = 0``, zero
+    keep budget), and each row normalizes into its own bucket count carried
+    as a kernel scalar — so mixing ``max_range = 1`` with ``max_range =
+    3600`` in one launch is exact. All rows' keep masks then compact
+    through ONE batched prefix-sum dispatch plus one XLA scatter
+    (:func:`repro.kernels.ops.compact_mask_batched`).
+
+    Parameters
+    ----------
+    streams : dict of str -> Stream
+        Named source streams.
+    max_ranges : sequence of int
+        Simulated time ranges; with ``pairs=None`` the scenario grid is the
+        cross product ``streams × max_ranges``.
+    pairs : sequence of (str, int), optional
+        Explicit scenario subset (e.g. only store-missing scenarios) —
+        each entry names a stream and its ``max_range``. Overrides the
+        cross product; ``max_ranges`` is ignored when given.
+    multiple_mode : {"time", "records"}
+        As in :func:`nsa`.
+    backend : {"auto", "numpy", "pallas"}
+        On ``"pallas"`` the whole grid is ONE ``stream_sample`` dispatch
+        plus ONE batched compaction; ``"numpy"``/off-TPU ``"auto"`` run the
+        per-scenario host path.
+
+    Returns
+    -------
+    dict of (str, int) -> Stream
+        One simulated stream per scenario, **bit-identical** to
+        ``nsa(streams[name], max_range)`` — and therefore to the per-range
+        :func:`nsa_batched` path — for every backend.
+
+    Raises
+    ------
+    ValueError
+        If any ``max_range`` is not positive.
+
+    Notes
+    -----
+    Sweeps containing an empty stream, and sweeps where any scenario falls
+    outside the device kernels' domain
+    (:class:`repro.kernels.ops.PallasDomainError`), fall back to the
+    per-scenario numpy path wholesale — never silently wrong output.
+    """
+    if pairs is None:
+        pairs = [(name, mr) for name in streams for mr in max_ranges]
+    pairs = [(name, int(mr)) for name, mr in pairs]
+    if any(mr <= 0 for _, mr in pairs):
+        raise ValueError("max_range must be positive")
+
+    def _host() -> Dict[Tuple[str, int], Stream]:
+        return {(name, mr): nsa(streams[name], mr,
+                                multiple_mode=multiple_mode,
+                                backend="numpy")
+                for name, mr in pairs}
+
+    resolved = _resolve_backend(backend)
+    if resolved != "pallas" or not pairs or \
+            any(len(streams[name]) == 0 for name, _ in pairs):
+        return _host()
+    from repro.kernels import ops
+    import jax.numpy as jnp
+
+    ts = [streams[name].t for name, _ in pairs]
+    mults = [_multiple(len(streams[name]), streams[name].time_range, mr,
+                       multiple_mode) for name, mr in pairs]
+    try:
+        ss_b, keep_b, lengths = ops.stream_sample_batched(
+            ts, [mr for _, mr in pairs], mults)
+    except ops.PallasDomainError:
+        # some scenario falls outside the kernel's exactness domain
+        return _host()
+    idx_b, totals = ops.compact_mask_batched(keep_b)
+    N = idx_b.shape[1]
+    ss_kept_b = np.asarray(jnp.take_along_axis(
+        ss_b, jnp.clip(idx_b, 0, max(N - 1, 0)), axis=1)).astype(np.int64)
+    idx_host = np.asarray(idx_b)
+    out = {}
+    for r, (name, mr) in enumerate(pairs):
+        src, total = streams[name], int(totals[r])
+        idx = idx_host[r, :total]
+        out[(name, mr)] = Stream(
+            name=src.name,
+            t=src.t[idx],
+            payload={k: v[idx] for k, v in src.payload.items()},
+            scale_stamp=ss_kept_b[r, :total],
+        )
+    return out
 
 
 def nsa_paper(stream: Stream, max_range: int, *, keep: str = "systematic",

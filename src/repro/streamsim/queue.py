@@ -104,3 +104,41 @@ class StreamQueue:
             "buckets_in": self.buckets_in,
             "records_in": self.records_in,
         }
+
+
+class QueueGroup:
+    """Named bounded :class:`StreamQueue` s for one batched replay — the
+    Kafka multi-topic analogue.
+
+    A multi-queue replay (:class:`repro.streamsim.producer.
+    MultiQueueProducer`) interleaves S scenarios' buckets in one
+    virtual-time loop; each scenario keeps its OWN bounded queue here, so
+    per-scenario ordering, stats, and at-least-once semantics are exactly
+    the single-queue ones. Backpressure is *shared*: the single producer
+    loop blocks on whichever member queue is full, stalling every
+    scenario's emission — the broker-cluster behaviour of one producer
+    feeding S topics with bounded retention. Consumers must therefore
+    drain their queues concurrently (one thread per scenario;
+    ``Controller.run_many`` does this) — a sequential drain can deadlock
+    against a full sibling queue.
+    """
+
+    def __init__(self, keys, maxsize: int = 64):
+        self.queues: Dict[Any, StreamQueue] = {
+            k: StreamQueue(maxsize=maxsize) for k in keys}
+
+    def __getitem__(self, key) -> StreamQueue:
+        return self.queues[key]
+
+    def __iter__(self):
+        return iter(self.queues)
+
+    def __len__(self) -> int:
+        return len(self.queues)
+
+    def items(self):
+        return self.queues.items()
+
+    def stats(self) -> Dict[Any, Dict[str, Any]]:
+        """Per-scenario transport stats, keyed like the constructor."""
+        return {k: q.stats() for k, q in self.queues.items()}

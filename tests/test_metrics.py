@@ -92,6 +92,15 @@ class TestBackendEquivalence:
         np.testing.assert_array_equal(per_second_counts(s, backend="auto"),
                                       per_second_counts(s, backend="numpy"))
 
+    def test_volatility_tight_on_day_scale(self):
+        # the engine's pairwise-block + Kahan moment reduction tightens the
+        # day-scale (86 400-bucket) backend agreement from the historical
+        # 1e-3 to 1e-5
+        rng = np.random.default_rng(9)
+        s = _stream(np.sort(rng.uniform(0, 86_400.0, 200_000)))
+        _vol_close(volatility(s, backend="numpy"),
+                   volatility(s, backend="pallas"), rtol=1e-5)
+
 
 class TestMetricsBatched:
     @pytest.mark.parametrize("backend", ["numpy", "pallas"])

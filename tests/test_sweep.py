@@ -1,0 +1,278 @@
+"""Single-dispatch sweep tests: range-padded NSA over the (dataset ×
+max_range) grid, multi-queue batched PSDA replay, and the Controller
+integration (ONE NSA dispatch + ONE replay loop per ``run_many`` sweep).
+
+Contracts under test:
+- ``nsa_sweep`` is bit-identical per scenario to the per-range
+  ``nsa_batched`` / per-scenario ``nsa`` paths, for every backend, across
+  ragged bucket counts (including ``max_range = 1`` and rows whose table
+  tail is > 90 % padding);
+- ``MultiQueueProducer`` is consumer-observation-equivalent to sequential
+  ``Producer.run`` per scenario (bucket sequence, emit_time stamps, queue
+  stats, producer stats);
+- ``Controller.run_many`` performs exactly ONE device NSA dispatch and ONE
+  producer virtual-time loop for a whole sweep (monkeypatch-counted).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.streamsim import (
+    Controller,
+    Producer,
+    StreamQueue,
+    VirtualClock,
+    make_stream,
+    nsa,
+    nsa_batched,
+    preprocess,
+)
+from repro.streamsim.nsa import nsa_sweep
+from repro.streamsim.producer import MultiQueueProducer
+from repro.streamsim.queue import QueueGroup
+
+
+def _streams(scale=0.005, seed=13):
+    return {name: preprocess(make_stream(name, scale=scale, seed=seed))
+            for name in ("sogouq", "traffic", "userbehavior")}
+
+
+def _streams_equal(a, b):
+    assert np.array_equal(a.t, b.t)
+    assert np.array_equal(a.scale_stamp, b.scale_stamp)
+    assert set(a.payload) == set(b.payload)
+    for k in a.payload:
+        assert np.array_equal(a.payload[k], b.payload[k])
+
+
+# --------------------------------------------------------- range-padded NSA
+class TestNSASweep:
+    @pytest.mark.parametrize("backend", ["numpy", "pallas"])
+    def test_bit_identical_to_per_range_batched(self, backend):
+        # ragged bucket counts in ONE dispatch: max_range = 1 (a single
+        # bucket), 20 (> 90 % of the 600-wide table is masked tail), 600
+        streams = _streams()
+        max_ranges = [1, 20, 600]
+        sweep = nsa_sweep(streams, max_ranges, backend=backend)
+        assert set(sweep) == {(n, mr) for n in streams for mr in max_ranges}
+        for mr in max_ranges:
+            per_range = nsa_batched(streams, mr, backend=backend)
+            for name in streams:
+                _streams_equal(sweep[(name, mr)], per_range[name])
+
+    def test_backends_bit_identical(self):
+        streams = _streams(scale=0.002, seed=7)
+        a = nsa_sweep(streams, [7, 600], backend="pallas")
+        b = nsa_sweep(streams, [7, 600], backend="numpy")
+        for key in a:
+            _streams_equal(a[key], b[key])
+
+    def test_pairs_subset(self):
+        # the Controller passes only store-missing scenarios
+        streams = _streams(scale=0.002, seed=3)
+        pairs = [("traffic", 40), ("sogouq", 600)]
+        out = nsa_sweep(streams, [], pairs=pairs, backend="pallas")
+        assert set(out) == set(pairs)
+        for name, mr in pairs:
+            _streams_equal(out[(name, mr)], nsa(streams[name], mr))
+
+    def test_bad_max_range_rejected(self):
+        streams = _streams(scale=0.002, seed=3)
+        with pytest.raises(ValueError):
+            nsa_sweep(streams, [600, 0])
+
+    def test_out_of_domain_falls_back_to_numpy(self):
+        # a giant single bucket ((c-1)*k >= 2**31) poisons the device sweep;
+        # it must fall back to the numpy path wholesale, bit-identically
+        from repro.streamsim.preprocess import Stream
+        streams = {
+            "burst": Stream("burst", np.full(100_000, 5.0),
+                            {"x": np.arange(100_000)}),
+            "ok": _streams(scale=0.002, seed=3)["traffic"],
+        }
+        out = nsa_sweep(streams, [600], backend="pallas")
+        for name, s in streams.items():
+            _streams_equal(out[(name, 600)], nsa(s, 600, backend="numpy"))
+
+    def test_empty_stream_falls_back(self):
+        from repro.streamsim.preprocess import Stream
+        streams = {"empty": Stream("empty", np.zeros(0), {}),
+                   "ok": _streams(scale=0.002, seed=3)["traffic"]}
+        out = nsa_sweep(streams, [60], backend="pallas")
+        assert len(out[("empty", 60)]) == 0
+        _streams_equal(out[("ok", 60)], nsa(streams["ok"], 60))
+
+
+class TestOpsPerRowRanges:
+    def test_per_row_ranges_equal_single_dispatches(self):
+        # the ops layer: one call with a per-row max_range vector must be
+        # bit-identical, row by row, to per-row single-range dispatches
+        from repro.kernels import ops
+        rng = np.random.default_rng(0)
+        ts = [np.sort(rng.uniform(0, 86_400.0, n))
+              for n in (100, 5000, 1237)]
+        ranges = [1, 37, 600]
+        mults = [86_400.0 / mr for mr in ranges]
+        ss_b, keep_b, lens = ops.stream_sample_batched(ts, ranges, mults)
+        for s, t in enumerate(ts):
+            ss_1, keep_1 = ops.stream_sample(t, ranges[s], mults[s])
+            n = lens[s]
+            np.testing.assert_array_equal(np.asarray(ss_b[s, :n]),
+                                          np.asarray(ss_1))
+            np.testing.assert_array_equal(np.asarray(keep_b[s, :n]),
+                                          np.asarray(keep_1))
+            assert not np.asarray(keep_b[s, n:]).any()
+
+    def test_nonpositive_range_rejected(self):
+        from repro.kernels import ops
+        with pytest.raises(ValueError):
+            ops.stream_sample_batched([np.arange(10.0)], [0], [1.0])
+
+
+# ------------------------------------------------------- multi-queue replay
+class TestMultiQueueProducer:
+    def _sims(self, max_ranges=(7, 40, 5000)):
+        s = preprocess(make_stream("traffic", scale=0.003, seed=5))
+        return {("traffic", mr): nsa(s, mr) for mr in max_ranges}
+
+    def test_equivalent_to_sequential_runs(self):
+        # per scenario: same bucket sequence, same emit_time stamps, same
+        # queue stats, same producer stats as a sequential Producer.run
+        sims = self._sims()
+        group = QueueGroup(sims, maxsize=100_000)
+        mp = MultiQueueProducer(sims, group.queues, clock=VirtualClock())
+        assert mp.run() == 0
+        for key, sim in sims.items():
+            q_ref = StreamQueue(maxsize=100_000)
+            p_ref = Producer(sim, q_ref, clock=VirtualClock())
+            assert p_ref.run() == 0
+            got, exp = list(group[key]), list(q_ref)
+            assert [b.scale_stamp for b in got] == \
+                [b.scale_stamp for b in exp]
+            assert [b.emit_time for b in got] == [b.emit_time for b in exp]
+            assert group[key].stats() == q_ref.stats()
+            assert mp.stats(key) == p_ref.stats()
+
+    def test_shared_backpressure_with_concurrent_consumers(self):
+        # tiny bounded queues: the single loop must stall on a full queue
+        # and still deliver everything once consumers drain concurrently
+        sims = self._sims((30, 60))
+        group = QueueGroup(sims, maxsize=2)
+        mp = MultiQueueProducer(sims, group.queues)
+        got = {}
+
+        def drain(key):
+            got[key] = sum(len(b) for b in group[key])
+
+        consumers = [threading.Thread(target=drain, args=(k,), daemon=True)
+                     for k in sims]
+        producer = threading.Thread(target=mp.run, daemon=True)
+        for th in consumers + [producer]:
+            th.start()
+        for th in consumers + [producer]:
+            th.join(timeout=30)
+            assert not th.is_alive()
+        for key, sim in sims.items():
+            assert got[key] == len(sim)
+
+    def test_scenario_queue_closes_at_its_last_bucket(self):
+        # a short scenario's consumer must not wait for the sweep to end
+        sims = self._sims((7, 5000))
+        group = QueueGroup(sims, maxsize=100_000)
+        mp = MultiQueueProducer(sims, group.queues)
+        assert mp.run() == 0
+        short = ("traffic", 7)
+        assert group[short].get() is not None  # buckets + close both landed
+
+    def test_mismatched_keys_rejected(self):
+        sims = self._sims((7,))
+        with pytest.raises(ValueError):
+            MultiQueueProducer(sims, {"other": StreamQueue()})
+
+    def test_real_clock_rejected(self):
+        from repro.streamsim.producer import RealClock
+        sims = self._sims((7,))
+        group = QueueGroup(sims)
+        with pytest.raises(ValueError):
+            MultiQueueProducer(sims, group.queues, clock=RealClock())
+
+    def test_queue_group_stats_keys(self):
+        sims = self._sims((7, 40))
+        group = QueueGroup(sims, maxsize=10)
+        assert set(group.stats()) == set(sims)
+        assert len(group) == 2
+
+
+# ------------------------------------------------------ controller sweeps
+class TestRunManySingleDispatch:
+    @staticmethod
+    def _consumer(queue):
+        return {"records_seen": sum(len(b) for b in queue)}
+
+    def test_one_nsa_dispatch_and_one_replay_loop(self, tmp_path,
+                                                  monkeypatch):
+        # the acceptance assertion: a (3 datasets × 6 max_ranges) grid must
+        # cost exactly ONE device NSA dispatch and ONE producer loop
+        import repro.kernels.stream_sample as sskern
+        import repro.streamsim.producer as prod
+
+        dispatches = []
+        real_kernel = sskern.stream_sample_pallas
+
+        def counting_kernel(*args, **kwargs):
+            dispatches.append(args[0].shape)
+            return real_kernel(*args, **kwargs)
+
+        monkeypatch.setattr(sskern, "stream_sample_pallas", counting_kernel)
+        # ops imported the symbol by value — patch its reference too
+        import repro.kernels.ops as ops_mod
+        monkeypatch.setattr(ops_mod, "stream_sample_pallas", counting_kernel)
+
+        loops = []
+        real_run = prod.MultiQueueProducer.run
+
+        def counting_run(self):
+            loops.append(len(self.streams))
+            return real_run(self)
+
+        monkeypatch.setattr(prod.MultiQueueProducer, "run", counting_run)
+
+        datasets = ["sogouq", "traffic", "userbehavior"]
+        max_ranges = [10, 20, 30, 40, 50, 60]
+        c = Controller(str(tmp_path / "store"))
+        reports = c.run_many(datasets, max_ranges, self._consumer,
+                             scale=0.002, seed=9, backend="pallas")
+        assert len(reports) == 18
+        assert len(dispatches) == 1, \
+            f"expected ONE NSA device dispatch, saw {len(dispatches)}"
+        assert dispatches[0][0] == 18, "all 18 scenarios in the one launch"
+        assert len(loops) == 1, \
+            f"expected ONE producer virtual-time loop, saw {len(loops)}"
+        assert loops[0] == 18, "all 18 scenarios in the one replay loop"
+
+    def test_sweep_report_equivalent_to_run(self, tmp_path):
+        # the single-dispatch sweep must still report exactly what
+        # sequential per-scenario Controller.run reports
+        datasets, max_ranges = ["traffic", "sogouq"], [40, 80]
+        c = Controller(str(tmp_path / "sweep"))
+        reports = c.run_many(datasets, max_ranges, self._consumer,
+                             scale=0.002, seed=9)
+        ref_c = Controller(str(tmp_path / "sequential"))
+        for r in reports:
+            ref = ref_c.run(r.dataset, r.max_range, self._consumer,
+                            scale=0.002, seed=9)
+            assert r.simulated_rows == ref.simulated_rows
+            assert r.trend_corr == pytest.approx(ref.trend_corr, rel=1e-9)
+            for key in ("records_seen", "records_in", "buckets_in",
+                        "bytes_in", "emitted_buckets", "emitted_records"):
+                assert r.consumer_metrics[key] == ref.consumer_metrics[key]
+
+    def test_consumer_exception_propagates(self, tmp_path):
+        def bad_consumer(queue):
+            raise RuntimeError("consumer exploded")
+
+        c = Controller(str(tmp_path / "store"))
+        with pytest.raises(RuntimeError, match="consumer exploded"):
+            c.run_many(["traffic"], [40], bad_consumer, scale=0.002, seed=9)
