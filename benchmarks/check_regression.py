@@ -1,49 +1,86 @@
-"""Bench-regression smoke gate for the single-dispatch sweep.
+"""Bench-regression smoke gate for the batched-sweep rows.
 
-Reads a ``BENCH_PR4.json`` produced by ``benchmarks/run.py`` and fails
-(exit 1) if the ``PR4/sweep_single_dispatch_3x6`` row is slower than the
-per-range path it replaced (its ``per_range_path_us`` derived field) —
-the guard against the range-padding overhead regressing small sweeps,
-which is exactly the regime quick-mode CI measures. Structural
-regressions (an accidental per-range dispatch loop, a padding blowup)
-show up as multiples, far outside benchmark noise; the currently measured
-quick-mode margin is >3x.
+Reads ``BENCH_*.json`` files produced by ``benchmarks/run.py`` and fails
+(exit 1) if any gated row is slower than the path it replaced (recorded
+as a ``*_us`` derived field on the row):
 
-Usage: ``python benchmarks/check_regression.py path/to/BENCH_PR4.json``
+- ``PR4/sweep_single_dispatch_3x6`` vs ``per_range_path_us`` — the
+  range-padded single launch must beat the per-range dispatch loop
+  (guards range-padding overhead on small sweeps).
+- ``PR5/sweep_sharded_4dev_8x6`` vs ``pr4_single_dispatch_us`` — the
+  planner's size-grouped shards must beat the monolithic PR 4 launch
+  (guards the padded-area win and the per-shard dispatch overhead).
+- ``PR5/device_resident_report_64`` vs ``host_gather_path_us`` — the
+  device-resident report chain must beat the host-gather + per-scenario
+  loop it replaced.
+
+Structural regressions (an accidental per-scenario dispatch loop, a
+padding blowup, a host round-trip creeping back in) show up as
+multiples, far outside benchmark noise; the currently measured quick-mode
+margins are >2x on every gated row.
+
+Usage: ``python benchmarks/check_regression.py BENCH_PR4.json
+[BENCH_PR5.json ...]`` — each file is checked against the gated rows it
+is expected to carry (matched by the row prefix in the file name).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import re
 import sys
 
-GATED_ROW = "PR4/sweep_single_dispatch_3x6"
+#: gated row -> the derived field naming the replaced path's time
+GATES = {
+    "PR4/sweep_single_dispatch_3x6": "per_range_path_us",
+    "PR5/sweep_sharded_4dev_8x6": "pr4_single_dispatch_us",
+    "PR5/device_resident_report_64": "host_gather_path_us",
+}
 
 
-def check(path: str) -> int:
-    with open(path) as f:
-        rows = json.load(f)
-    row = next((r for r in rows
-                if r["name"].split("@")[0] == GATED_ROW), None)
+def _expected_rows(path: str):
+    """The gated rows a file must carry, by its BENCH_<prefix>.json name."""
+    stem = os.path.basename(path)
+    m = re.match(r"BENCH_(\w+)\.json$", stem)
+    prefix = (m.group(1) if m else "") + "/"
+    return [name for name in GATES if name.startswith(prefix)]
+
+
+def _check_row(rows, name: str, baseline_field: str) -> int:
+    row = next((r for r in rows if r["name"].split("@")[0] == name), None)
     if row is None:
-        print(f"FAIL: no {GATED_ROW} row in {path}", file=sys.stderr)
+        print(f"FAIL: no {name} row found", file=sys.stderr)
         return 1
-    m = re.search(r"per_range_path_us=(\d+(?:\.\d+)?)", row["derived"])
+    m = re.search(rf"{baseline_field}=(\d+(?:\.\d+)?)", row["derived"])
     if m is None:
-        print(f"FAIL: {row['name']} carries no per_range_path_us baseline",
+        print(f"FAIL: {row['name']} carries no {baseline_field} baseline",
               file=sys.stderr)
         return 1
     new, baseline = float(row["us_per_call"]), float(m.group(1))
     verdict = "OK" if new <= baseline else "FAIL"
-    print(f"{verdict}: {row['name']} = {new:.0f}us vs per-range baseline "
-          f"{baseline:.0f}us ({baseline / max(new, 1e-9):.1f}x)")
+    print(f"{verdict}: {row['name']} = {new:.0f}us vs replaced-path "
+          f"baseline {baseline:.0f}us ({baseline / max(new, 1e-9):.1f}x)")
     if new > baseline:
-        print("single-dispatch sweep is SLOWER than the per-range path it "
-              "replaces — range-padding overhead regression", file=sys.stderr)
+        print(f"{name} is SLOWER than the path it replaces — structural "
+              "regression", file=sys.stderr)
         return 1
     return 0
 
 
+def check(paths) -> int:
+    status = 0
+    for path in paths:
+        with open(path) as f:
+            rows = json.load(f)
+        expected = _expected_rows(path)
+        if not expected:
+            print(f"note: no gated rows expected in {path}")
+            continue
+        for name in expected:
+            status |= _check_row(rows, name, GATES[name])
+    return status
+
+
 if __name__ == "__main__":
-    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR4.json"))
+    sys.exit(check(sys.argv[1:] or ["BENCH_PR4.json", "BENCH_PR5.json"]))

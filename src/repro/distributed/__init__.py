@@ -2,7 +2,11 @@
 constraint API the model code calls (no-op outside an active mesh context).
 """
 
-from repro.distributed.api import constrain, sharding_rules  # noqa: F401
+from repro.distributed.api import (  # noqa: F401
+    constrain,
+    process_topology,
+    sharding_rules,
+)
 from repro.distributed.sharding import (  # noqa: F401
     RULESETS,
     batch_pspec,

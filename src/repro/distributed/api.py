@@ -38,6 +38,22 @@ def active_rules() -> Optional[Tuple[Mesh, Dict]]:
     return _RULES.get()
 
 
+def process_topology() -> Tuple[int, int, int]:
+    """``(host_index, n_hosts, n_local_devices)`` of THIS process.
+
+    The sweep planner's default partition geometry
+    (:func:`repro.streamsim.plan.plan_sweep`): in a single-process run
+    this is ``(0, 1, local_device_count)``; under
+    ``jax.distributed.initialize`` every host sees its own index within
+    the job, so all hosts can build the SAME plan and each executes only
+    its strided slice of the scenario grid.
+    """
+    import jax
+
+    return jax.process_index(), jax.process_count(), \
+        jax.local_device_count()
+
+
 def constrain(x, *logical_axes: Optional[str]):
     """Annotate array x (rank == len(logical_axes)) with the active rules."""
     ctx = _RULES.get()

@@ -14,6 +14,14 @@ O(n·B) one-hot work against the *whole* bucket axis in a single VMEM block
 fit), and accumulated counts in float32, which silently rounds once any
 bucket exceeds 2²⁴ records.
 
+Two ops-layer entry forms feed this kernel
+(:mod:`repro.kernels.ops`): ``stream_metrics_batched`` stacks host
+scale-stamp arrays into the padded ``(S, N)`` layout, while
+``stream_metrics_batched_device`` consumes stamps that are ALREADY on
+device — the sweep engine chains it directly after the batched NSA
+compaction, masking each row's invalid tail to the padding id on device,
+so kept stamps never round-trip through host between NSA and metrics.
+
 Design
 ------
 Grid ``(stream, record-tile)`` — the same 2-D layout as

@@ -160,7 +160,7 @@ def stream_sample_ref(t: jnp.ndarray, max_range: int, multiple: float):
     return ss[0], keep[0].astype(bool)
 
 
-def stream_sample_batched(ts, max_range, multiples):
+def stream_sample_batched(ts, max_range, multiples, *, device=None):
     """Batched fused NSA inner loop: S streams, ONE kernel dispatch.
 
     ts        : sequence of S sorted 1-D float64 timestamp arrays (ragged
@@ -171,6 +171,9 @@ def stream_sample_batched(ts, max_range, multiples):
                 maximum (tail buckets carry a zero keep budget), so one
                 dispatch covers the whole (stream × max_range) grid.
     multiples : per-stream multiple (scalar broadcasts).
+    device    : optional jax device the launch is committed to (the sweep
+                engine places each plan shard on its own device; ``None``
+                keeps jax's default placement).
 
     Pads every stream to the common TILE-aligned length and runs the 2-D-grid
     kernel once — replacing S sequential :func:`stream_sample` dispatches.
@@ -204,11 +207,16 @@ def stream_sample_batched(ts, max_range, multiples):
         t_b[s, len(t32):] = t32[-1]          # pad into the last bucket
         starts_b[s], counts_b[s], k_b[s] = starts, counts, ktab
         scal_b[s] = scalars
+
+    def _dev(x):
+        return jax.device_put(x, device) if device is not None \
+            else jnp.asarray(x)
+
     ss, keep = stream_sample_pallas(
-        jnp.asarray(t_b), jnp.asarray(starts_b), jnp.asarray(counts_b),
-        jnp.asarray(k_b), jnp.asarray(scal_b), width,
+        _dev(t_b), _dev(starts_b), _dev(counts_b),
+        _dev(k_b), _dev(scal_b.astype(np.float32)), width,
         interpret=not _on_tpu())
-    valid = jnp.arange(N)[None, :] < jnp.asarray(lengths)[:, None]
+    valid = jnp.arange(N)[None, :] < _dev(lengths)[:, None]
     return ss, keep.astype(bool) & valid, lengths
 
 
@@ -336,6 +344,60 @@ def stream_metrics_batched(ss_seq, max_range: int):
     hist, mom = stream_metrics_pallas(jnp.asarray(ssb), buckets,
                                       interpret=not _on_tpu())
     return hist[:, :max_range], mom, lengths
+
+
+def stream_metrics_batched_device(ss: jnp.ndarray, valid_counts,
+                                  max_range: int):
+    """Fused metrics over scale stamps that are ALREADY device-resident.
+
+    The device-input form of :func:`stream_metrics_batched` — what the
+    sweep engine chains straight after the batched NSA compaction so
+    kept-stamp sets never round-trip through host between NSA and metrics.
+
+    Parameters
+    ----------
+    ss : jnp.ndarray, int32, shape (S, N)
+        Per-stream scale stamps on device. Row ``s``'s entries at columns
+        ``>= valid_counts[s]`` may hold arbitrary garbage (e.g. clipped
+        gather output) — they are masked to the kernel's padding id here,
+        on device.
+    valid_counts : array-like, int, shape (S,)
+        Per-row count of valid leading entries. A host array costs one
+        O(S) upload; a device array keeps the chain transfer-free.
+    max_range : int
+        Bucket-axis width; every valid stamp must lie in
+        ``[0, max_range)`` (enforced by NSA upstream, not re-checked here
+        — a host check would defeat the device residency).
+
+    Returns
+    -------
+    (hist int32 (S, max_range) device, moments f32 (S, 2) device)
+        Bit-identical counts / identical-kernel moments to feeding the
+        same stamps through the host-input path.
+
+    Raises
+    ------
+    PallasDomainError
+        If ``N`` (the per-row capacity, an upper bound on any bucket
+        count) exceeds the int32 histogram domain.
+    """
+    ss = jnp.asarray(ss)
+    if ss.ndim != 2:
+        raise ValueError(f"ss must be (S, N), got shape {ss.shape}")
+    if max_range <= 0:
+        raise ValueError("max_range must be positive")
+    S, N = ss.shape
+    _check_metrics_domain(N)
+    buckets = int(-(-max_range // BUCKET_BLOCK) * BUCKET_BLOCK)
+    nvalid = jnp.asarray(valid_counts, jnp.int32).reshape(S, 1)
+    ssb = jnp.where(jnp.arange(N, dtype=jnp.int32)[None, :] < nvalid,
+                    ss.astype(jnp.int32), buckets)   # padding id >= buckets
+    pad = (-N) % TILE
+    if pad or N == 0:
+        ssb = jnp.concatenate(
+            [ssb, jnp.full((S, pad or TILE), buckets, jnp.int32)], axis=1)
+    hist, mom = stream_metrics_pallas(ssb, buckets, interpret=not _on_tpu())
+    return hist[:, :max_range], mom
 
 
 # --------------------------------------------------------------- histogram
@@ -492,6 +554,50 @@ def trend_scan(q: jnp.ndarray, window: int) -> jnp.ndarray:
     return trend[0, :int(lengths[0])]
 
 
+def trend_scan_batched_device(qmat: jnp.ndarray, lengths, window: int,
+                              totals=None):
+    """Device-input form of :func:`trend_scan_batched`.
+
+    qmat : (S, N) int32 count series already on device, zero-padded past
+    each row's true length (the fused metrics engine's histograms are
+    exactly this shape). ``lengths`` gives the true series lengths (host).
+    ``totals`` — per-row total record counts for the int32 prefix-sum
+    domain guard; the caller (who produced the counts) knows them as O(S)
+    host scalars, so the guard costs no device→host transfer of the count
+    matrix itself. ``None`` skips the guard — only for counts whose totals
+    are already bounded elsewhere.
+
+    Returns ``(trend f32 (S, N) device, lengths int64 (S,))``; same
+    contract as the host-input form.
+    """
+    if window < 1:
+        raise ValueError("window must be >= 1")
+    qmat = jnp.asarray(qmat)
+    if qmat.ndim != 2:
+        raise ValueError(f"qmat must be (S, N), got shape {qmat.shape}")
+    lengths = np.asarray(lengths, np.int64).reshape(-1)
+    if len(lengths) != qmat.shape[0]:
+        raise ValueError("lengths must align with qmat rows")
+    if totals is not None:
+        totals = np.asarray(totals, np.int64).reshape(-1)
+        if np.any(totals > _TREND_TOTAL_LIMIT):
+            raise PallasDomainError(
+                "total count exceeds the int32 prefix-sum domain "
+                f"(limit {_TREND_TOTAL_LIMIT}); use the numpy trend path")
+    S, N = qmat.shape
+    pad = (-N) % TREND_TILE
+    if pad or N == 0:
+        qmat = jnp.concatenate(
+            [qmat.astype(jnp.int32),
+             jnp.zeros((S, pad or TREND_TILE), jnp.int32)], axis=1)
+    psum = trend_scan_pallas(qmat.astype(jnp.int32),
+                             interpret=not _on_tpu())
+    w_eff, half = _window_tables(lengths, window)
+    trend = _trend_from_prefix(psum, jnp.asarray(lengths),
+                               jnp.asarray(w_eff), jnp.asarray(half))
+    return trend, lengths
+
+
 def trend_pair_stats(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-pairs Pearson sufficient statistics of stacked trend series.
 
@@ -601,6 +707,13 @@ def trend_correlation_batched(qs, window: int,
         trend_correlation_matrix`` does).
     """
     trend, lengths = trend_scan_batched(qs, window)
+    return _corr_from_trends(trend, lengths, n_points)
+
+
+def _corr_from_trends(trend: jnp.ndarray, lengths: np.ndarray,
+                      n_points: Optional[int]) -> np.ndarray:
+    """Shared tail of the S×S matrix paths: trends → common-grid resample
+    → centering → Gram kernel → host f64 normalization."""
     S = len(lengths)
     live = np.flatnonzero(lengths > 0)
     if len(live) == 0:
@@ -612,6 +725,159 @@ def trend_correlation_batched(qs, window: int,
     z = z - jnp.mean(z, axis=1, keepdims=True)
     _, gram = trend_pair_stats(z)
     return _corr_from_gram(gram, live, S)
+
+
+def trend_correlation_batched_device(qmat: jnp.ndarray, lengths,
+                                     window: int,
+                                     n_points: Optional[int] = None,
+                                     totals=None) -> np.ndarray:
+    """S×S trend-correlation matrix from count series ALREADY on device.
+
+    The device-input form of :func:`trend_correlation_batched`: the sweep
+    engine feeds it the fused metrics engine's histogram rows directly, so
+    the whole Fig.-6 chain — counts → scan → trends → resample → Gram —
+    never moves the count matrix through host. Same output contract and
+    the same O(S²) host-side f64 normalization at the end; ``totals``
+    drives the int32 domain guard as in
+    :func:`trend_scan_batched_device`.
+    """
+    trend, lengths = trend_scan_batched_device(qmat, lengths, window,
+                                               totals=totals)
+    return _corr_from_trends(trend, lengths, n_points)
+
+
+# ------------------------------------------------- pairwise trend correlation
+@functools.partial(jax.jit, static_argnames=("k_max",))
+def _pairwise_corr_jit(qa, la, wa, ha, ai, qb, lb, wb, hb, kk, k_max: int):
+    """P (original, simulated) pairs → P Pearson r's, one fused XLA chain.
+
+    ``qa`` holds the D *unique* left-side series (e.g. one per dataset)
+    and ``ai`` maps each pair to its left row, so every unique left
+    trend is computed ONCE — the per-scenario host loop recomputed the
+    original's full-day sliding mean for every (dataset, max_range) cell.
+    Per pair: int32 prefix sums (exact — same domain as the scan kernel)
+    → sliding-mean trends (`_trend_from_prefix` tail) → both series
+    linearly resampled onto the pair's OWN ``min(n_a, n_b)``-point grid
+    (matching the host pairwise convention of
+    ``trend_correlation_from_counts``, where every pair gets its own
+    grid; the left resample gathers straight from the unique trend rows,
+    never materializing a (P, Na) copy) → masked mean-centering →
+    Pearson. Ragged grids ride one padded (P, k_max) lane space with
+    per-row valid masks, so the whole report statistic is ONE device
+    program instead of a per-scenario host loop.
+    """
+    ta_u = _trend_from_prefix(jnp.cumsum(qa, axis=1, dtype=jnp.int32),
+                              la, wa, ha)                  # (D, Na) once
+    tb = _trend_from_prefix(jnp.cumsum(qb, axis=1, dtype=jnp.int32),
+                            lb, wb, hb)
+
+    def grid(n, k):
+        n = n.astype(jnp.float32)[:, None]
+        k = k.astype(jnp.float32)[:, None]
+        i = jnp.arange(k_max, dtype=jnp.float32)[None, :]
+        pos = i * (n - 1.0) / jnp.maximum(k - 1.0, 1.0)
+        nn = n.astype(jnp.int32)
+        j = jnp.clip(pos.astype(jnp.int32), 0, jnp.maximum(nn - 2, 0))
+        frac = pos - j.astype(jnp.float32)
+        j1 = jnp.minimum(j + 1, jnp.maximum(nn - 1, 0))
+        return j, j1, frac
+
+    i_lane = jnp.arange(k_max, dtype=jnp.int32)[None, :]
+    kkc = kk.astype(jnp.int32)[:, None]
+    valid = i_lane < kkc
+
+    # left side: gather K points per pair from the unique trend rows
+    ja, ja1, fa = grid(la[ai], kk)
+    ra = ta_u[ai[:, None], ja] * (1.0 - fa) + ta_u[ai[:, None], ja1] * fa
+    # right side: one row per pair already
+    jb, jb1, fb = grid(lb, kk)
+    rb = jnp.take_along_axis(tb, jb, axis=1) * (1.0 - fb) + \
+        jnp.take_along_axis(tb, jb1, axis=1) * fb
+    ra = jnp.where(valid, ra, 0.0)
+    rb = jnp.where(valid, rb, 0.0)
+
+    denom_k = jnp.maximum(kkc.astype(jnp.float32), 1.0)
+    ra = jnp.where(valid, ra - jnp.sum(ra, axis=1, keepdims=True) / denom_k,
+                   0.0)
+    rb = jnp.where(valid, rb - jnp.sum(rb, axis=1, keepdims=True) / denom_k,
+                   0.0)
+    num = jnp.sum(ra * rb, axis=1)
+    den = jnp.sum(ra * ra, axis=1) * jnp.sum(rb * rb, axis=1)
+    r = num / jnp.sqrt(den)
+    return jnp.where((den > 0.0) & (kk > 0), jnp.clip(r, -1.0, 1.0),
+                     jnp.nan)
+
+
+def trend_corr_pairwise(qa: jnp.ndarray, lengths_a, qb: jnp.ndarray,
+                        lengths_b, window: int, totals=None,
+                        a_index=None) -> np.ndarray:
+    """Pairwise trend correlations for P (original, simulated) pairs.
+
+    The batched device form of the per-report statistic
+    ``trend_correlation_from_counts(original_counts, simulated_counts)``:
+    P pairs in one fused XLA chain, instead of P sequential host
+    sliding-mean/resample/Pearson passes. Pure XLA (int32 ``cumsum`` +
+    the shared ``_trend_from_prefix`` tail) — device-resident without a
+    Pallas leg, so it is fast in CPU tests too. When several pairs share
+    a left-side series (every max_range of a sweep correlates against
+    the SAME original), pass the unique rows plus ``a_index``: each
+    unique trend is computed once and gathered per pair, where the host
+    loop recomputed it per scenario.
+
+    Parameters
+    ----------
+    qa : jnp.ndarray, int32, shape (D, Na)
+        Unique left-side count rows on device (zero-padded tails) —
+        ``D == P`` with ``a_index=None``.
+    qb : jnp.ndarray, int32, shape (P, Nb)
+        Right-side count rows (one per pair) — e.g. the fused metrics
+        engine's histograms for the sims.
+    lengths_a, lengths_b : array-like int, shape (D,) / (P,)
+        True series lengths per row (host).
+    window : int
+        Sliding-mean window shared by both sides (>= 1).
+    totals : array-like int, optional
+        Per-row max total counts for the int32 domain guard (raises
+        :class:`PallasDomainError` when exceeded).
+    a_index : array-like int, shape (P,), optional
+        Pair → left-row map; ``None`` means the identity (``D == P``).
+
+    Returns
+    -------
+    np.ndarray, float64, shape (P,)
+        Pearson r per pair, NaN for empty or zero-variance pairs — the
+        host convention, within the documented 1e-3 f32 tolerance.
+    """
+    if window < 1:
+        raise ValueError("window must be >= 1")
+    la = np.asarray(lengths_a, np.int64).reshape(-1)
+    lb = np.asarray(lengths_b, np.int64).reshape(-1)
+    qa, qb = jnp.asarray(qa), jnp.asarray(qb)
+    if a_index is None:
+        a_index = np.arange(len(la))
+    ai = np.asarray(a_index, np.int64).reshape(-1)
+    if qa.ndim != 2 or qb.ndim != 2 or len(ai) != qb.shape[0] or \
+            len(la) != qa.shape[0] or len(lb) != qb.shape[0]:
+        raise ValueError("qa/qb must be 2-D with aligned lengths/index")
+    if len(ai) and (ai.min() < 0 or ai.max() >= len(la)):
+        raise ValueError("a_index out of range")
+    if totals is not None:
+        totals = np.asarray(totals, np.int64).reshape(-1)
+        if np.any(totals > _TREND_TOTAL_LIMIT):
+            raise PallasDomainError(
+                "total count exceeds the int32 prefix-sum domain "
+                f"(limit {_TREND_TOTAL_LIMIT}); use the numpy trend path")
+    kk = np.minimum(la[ai], lb)
+    k_max = max(int(kk.max(initial=1)), 1)
+    wa, ha = _window_tables(la, window)
+    wb, hb = _window_tables(lb, window)
+    r = _pairwise_corr_jit(qa.astype(jnp.int32), jnp.asarray(la),
+                           jnp.asarray(wa), jnp.asarray(ha),
+                           jnp.asarray(ai),
+                           qb.astype(jnp.int32), jnp.asarray(lb),
+                           jnp.asarray(wb), jnp.asarray(hb),
+                           jnp.asarray(kk), k_max)
+    return np.asarray(r, np.float64)
 
 
 # ------------------------------------------------------------ flash decode
@@ -635,8 +901,10 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 __all__ = [
     "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
     "compact_mask_batched", "flash_decode", "on_tpu", "stream_metrics",
-    "stream_metrics_batched", "stream_sample", "stream_sample_batched",
-    "stream_sample_ref", "trend_correlation_batched", "trend_pair_stats",
-    "trend_scan", "trend_scan_batched", "volatility_moments",
+    "stream_metrics_batched", "stream_metrics_batched_device",
+    "stream_sample", "stream_sample_batched", "stream_sample_ref",
+    "trend_corr_pairwise", "trend_correlation_batched",
+    "trend_correlation_batched_device", "trend_pair_stats", "trend_scan",
+    "trend_scan_batched", "trend_scan_batched_device", "volatility_moments",
     "volatility_stats",
 ]

@@ -42,8 +42,17 @@ from repro.streamsim.producer import (  # noqa: F401
     RealClock,
     VirtualClock,
 )
-from repro.streamsim.controller import (  # noqa: F401
-    Controller,
+from repro.streamsim.plan import (  # noqa: F401
+    ScenarioSpec,
+    Shard,
+    SweepPlan,
+    plan_sweep,
+)
+from repro.streamsim.engine import (  # noqa: F401
+    DeviceSweepResult,
     FidelityReport,
     SimulationReport,
+    execute_sweep,
+    run_sweep,
 )
+from repro.streamsim.controller import Controller  # noqa: F401

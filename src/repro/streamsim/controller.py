@@ -8,80 +8,35 @@ The paper's controller has three functions, mirrored 1:1 here:
 The paper collects metrics over the SPS's REST API into a "metrics
 repository"; here the consumers (training/serving loops) expose a metrics
 callback and the repository is a JSON directory.
+
+Since the plan/engine split, the controller is a THIN driver: ``run`` and
+``run_many`` build a :class:`~repro.streamsim.plan.SweepPlan` and hand it
+to the sweep engine (:mod:`repro.streamsim.engine`), which owns all NSA /
+metrics / fidelity / replay orchestration. What remains here is the
+paper-side surface: the store, the metrics repository, and the
+per-dataset preprocessing timer.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import json
-import threading
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.streamsim import engine
 from repro.streamsim.datasets import make_stream
-from repro.streamsim.metrics import (StreamMetrics, Volatility,
-                                     metrics_batched,
-                                     trend_correlation_from_counts,
-                                     trend_correlation_matrix)
-from repro.streamsim.nsa import compression_factor, nsa, nsa_sweep
+# Report dataclasses live in the engine's report layer now; re-exported
+# here because the controller is their historical import location.
+from repro.streamsim.engine import FidelityReport, SimulationReport  # noqa: F401
+from repro.streamsim.nsa import _resolve_backend, nsa
+from repro.streamsim.plan import plan_sweep
 from repro.streamsim.preprocess import Stream, preprocess
-from repro.streamsim.producer import (MultiQueueProducer, Producer,
-                                      VirtualClock)
-from repro.streamsim.queue import QueueGroup, StreamQueue
+from repro.streamsim.queue import StreamQueue
 from repro.streamsim.store import StreamStore
-
-
-@dataclasses.dataclass
-class SimulationReport:
-    dataset: str
-    max_range: int
-    original_rows: int
-    simulated_rows: int
-    compression: float
-    original_volatility: Volatility
-    simulated_volatility: Volatility
-    trend_corr: float
-    preprocess_s: float
-    nsa_s: float
-    produce_s: float
-    consumer_metrics: Dict
-
-    def to_json(self) -> Dict:
-        d = dataclasses.asdict(self)
-        return d
-
-
-@dataclasses.dataclass
-class FidelityReport:
-    """One sweep's Fig.-6 fidelity artifact from :meth:`Controller.run_many`.
-
-    ``trend_corr`` is the full S×S trend-correlation matrix over the
-    sweep's streams — every dataset's original stream followed by every
-    dataset's simulated stream at ``max_range`` — computed by
-    :func:`repro.streamsim.metrics.trend_correlation_matrix` from ONE
-    batched dispatch (on the pallas backend the whole counts → trend →
-    correlation chain stays on device). ``labels[i]`` names row/column
-    ``i`` (``"<dataset>/original"`` or ``"<dataset>/sim<max_range>"``).
-
-    Matrix entries for empty / zero-variance streams are NaN in memory and
-    serialize to ``null`` in :meth:`to_json` (bare ``NaN`` tokens are not
-    valid JSON and would break non-Python consumers of the artifact).
-    """
-
-    max_range: int
-    window_s: int
-    labels: List[str]
-    trend_corr: List[List[float]]
-
-    def to_json(self) -> Dict:
-        d = dataclasses.asdict(self)
-        d["trend_corr"] = [[None if v != v else v for v in row]
-                           for row in self.trend_corr]
-        return d
 
 
 class Controller:
@@ -119,111 +74,34 @@ class Controller:
         :mod:`repro.streamsim.nsa`); every backend is bit-identical, so the
         store cache is backend-agnostic.
         """
-        # timing always reflects THIS call: 0.0 on a store-cache hit
-        self._last_nsa_s = 0.0
         key = f"{dataset}__sim{max_range}"
         if self.store.exists(key) and not force:
             return self.store.get(key)
         original = self.prepare(dataset, scale=scale, seed=seed, force=force)
-        t0 = time.perf_counter()
         sim = nsa(original, max_range, backend=backend)
-        self._last_nsa_s = time.perf_counter() - t0
         self.store.put(key, sim, {"max_range": max_range})
         return sim
 
-    def _produce_consume(self, sim: Stream,
-                         consumer: Callable[[StreamQueue], Dict],
-                         queue_size: int):
-        """PSDA leg shared by :meth:`run` and :meth:`run_many`: producer
-        fills, consumer drains (bounded queue means we interleave: run the
-        producer in a thread to honour backpressure)."""
-        queue = StreamQueue(maxsize=queue_size)
-        producer = Producer(sim, queue, clock=VirtualClock())
-        t0 = time.perf_counter()
-        status = [None]
-
-        def _produce():
-            status[0] = producer.run()
-
-        th = threading.Thread(target=_produce, daemon=True)
-        th.start()
-        consumer_metrics = consumer(queue)
-        th.join()
-        t_prod = time.perf_counter() - t0
-        if status[0] != 0:
-            raise RuntimeError("producer reported fault status")
-        return ({**consumer_metrics, **queue.stats(), **producer.stats()},
-                t_prod)
-
-    def _produce_consume_many(self, sims: Dict, consumer, queue_size: int):
-        """Batched PSDA leg of :meth:`run_many`: ONE
-        :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
-        loop interleaves every scenario's buckets; each scenario's consumer
-        drains its own bounded queue in its own thread (shared backpressure
-        makes concurrent drains mandatory — a full sibling queue stalls the
-        whole loop). Returns ``({scenario: merged stats}, shared wall
-        time)`` with per-scenario stats equivalent to sequential
-        :meth:`_produce_consume` calls."""
-        group = QueueGroup(sims, maxsize=queue_size)
-        producer = MultiQueueProducer(sims, group.queues,
-                                      clock=VirtualClock())
-        status = [None]
-        results: Dict = {}
-        errors: List = []
-
-        def _produce():
-            status[0] = producer.run()
-
-        def _consume(key):
-            try:
-                results[key] = consumer(group[key])
-            except Exception as exc:  # keep the producer loop drainable
-                errors.append(exc)
-                for _ in group[key]:
-                    pass
-
-        t0 = time.perf_counter()
-        threads = [threading.Thread(target=_produce, daemon=True)]
-        threads += [threading.Thread(target=_consume, args=(key,),
-                                     daemon=True) for key in sims]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        t_prod = time.perf_counter() - t0
-        if errors:
-            raise errors[0]
-        if status[0] != 0:
-            raise RuntimeError("producer reported fault status")
-        return ({key: {**results[key], **group[key].stats(),
-                       **producer.stats(key)} for key in sims}, t_prod)
-
-    def _report(self, dataset: str, max_range: int, original: Stream,
-                sim: Stream, om: StreamMetrics, sm: StreamMetrics,
-                timings, consumer_metrics: Dict) -> SimulationReport:
-        t_pre, t_nsa, t_prod = timings
-        report = SimulationReport(
-            dataset=dataset,
-            max_range=max_range,
-            original_rows=len(original),
-            simulated_rows=len(sim),
-            compression=compression_factor(original, max_range),
-            original_volatility=om.volatility,
-            simulated_volatility=sm.volatility,
-            trend_corr=trend_correlation_from_counts(om.counts, sm.counts),
-            preprocess_s=t_pre,
-            nsa_s=t_nsa,
-            produce_s=t_prod,
-            consumer_metrics=consumer_metrics,
-        )
-        self.save_metrics(report)
-        return report
+    def _prepare_all(self, datasets: Sequence[str], scale: float,
+                     seed: int) -> tuple:
+        """POSD every dataset, timing each (matching ``run``'s reports)."""
+        originals, t_pre = {}, {}
+        for d in datasets:
+            t0 = time.perf_counter()
+            originals[d] = self.prepare(d, scale=scale, seed=seed)
+            t_pre[d] = time.perf_counter() - t0
+        return originals, t_pre
 
     def run(self, dataset: str, max_range: int,
             consumer: Callable[[StreamQueue], Dict], *,
             scale: float = 1.0, seed: int = 0,
             queue_size: int = 64, backend: str = "auto") -> SimulationReport:
         """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
+
+        A thin driver: the scenario becomes a one-cell
+        :class:`~repro.streamsim.plan.SweepPlan` executed by the sweep
+        engine; the consumer drains the queue on the CALLING thread (no
+        thread-safety requirement, unlike :meth:`run_many`).
 
         Parameters
         ----------
@@ -240,15 +118,15 @@ class Controller:
             Bounded-queue capacity; the producer honours backpressure.
         backend : {"auto", "numpy", "pallas"}
             Passed through to NSA and the metrics engine. NSA output is
-            bit-identical across backends; metric moments agree within
-            1e-3; out-of-domain inputs fall back to numpy automatically.
+            bit-identical across backends; metric statistics agree within
+            the documented 1e-3 tolerance; out-of-domain inputs fall back
+            to numpy automatically.
 
         Returns
         -------
         SimulationReport
-            All report statistics — original and simulated volatility plus
-            the trend correlation — come from ONE batched metrics-engine
-            call, so each stream is read once instead of once per
+            All report statistics come from the engine's batched metrics
+            pass, so each stream is read once instead of once per
             statistic. The report is also persisted as JSON (function (3):
             the metrics repository).
 
@@ -257,40 +135,43 @@ class Controller:
         RuntimeError
             If the producer reports a non-zero fault status.
         """
-        t0 = time.perf_counter()
-        original = self.prepare(dataset, scale=scale, seed=seed)
-        t_pre = time.perf_counter() - t0
-
-        sim = self.simulate(dataset, max_range, scale=scale, seed=seed,
-                            backend=backend)
-        t_nsa = self._last_nsa_s
-
-        consumer_metrics, t_prod = self._produce_consume(sim, consumer,
-                                                         queue_size)
-        om, sm = metrics_batched([original, sim], [None, max_range],
-                                 backend=backend)
-        return self._report(dataset, max_range, original, sim, om, sm,
-                            (t_pre, t_nsa, t_prod), consumer_metrics)
+        originals, t_pre = self._prepare_all([dataset], scale, seed)
+        plan = plan_sweep(self.store, [dataset], [max_range],
+                          {dataset: len(originals[dataset])},
+                          scale=scale, seed=seed, n_hosts=1, host_index=0,
+                          n_devices=1)
+        result = engine.execute_sweep(plan, originals, self.store,
+                                      backend=backend)
+        sim = result.materialize()[(dataset, max_range)]
+        consumer_metrics, t_prod = engine.replay_one(sim, consumer,
+                                                     queue_size)
+        report = engine.build_report(result, (dataset, max_range),
+                                     t_pre[dataset], t_prod,
+                                     consumer_metrics)
+        self.save_metrics(report)
+        return report
 
     def run_many(self, datasets: Sequence[str], max_ranges: Sequence[int],
                  consumer: Callable[[StreamQueue], Dict], *,
                  scale: float = 1.0, seed: int = 0, queue_size: int = 64,
-                 backend: str = "auto",
-                 fidelity_window_s: int = 60) -> List[SimulationReport]:
-        """The Tables 1-3 scenario sweep (datasets × time ranges) as batched
-        dispatches instead of ``len(datasets) * len(max_ranges)`` sequential
-        :meth:`run` calls.
+                 backend: str = "auto", fidelity_window_s: int = 60,
+                 n_devices: Optional[int] = None,
+                 host_index: Optional[int] = None,
+                 n_hosts: Optional[int] = None) -> List[SimulationReport]:
+        """The Tables 1-3 scenario sweep (datasets × time ranges), planned
+        and executed by the sweep engine.
 
-        ALL store-missing scenarios — the full grid, not one batch per
-        ``max_range`` — go through ONE range-padded :func:`nsa_sweep`
-        dispatch; every scenario's statistics (original + simulated
-        volatility, trend correlation) then come from ONE batched
-        metrics-engine call covering all original and simulated streams;
-        and every scenario replays through ONE
-        :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
-        loop feeding per-scenario bounded queues (each scenario's consumer
-        drains its queue in its own thread). The 3×6 sweep therefore costs
-        1 NSA dispatch + 1 replay loop instead of 6 + 18.
+        A thin driver over :func:`repro.streamsim.plan.plan_sweep` +
+        :func:`repro.streamsim.engine.execute_sweep` +
+        :func:`repro.streamsim.engine.run_sweep`: the plan resolves
+        store-cache hits and partitions the store-missing scenarios into
+        per-device (and, under ``jax.distributed``, per-host) shards with
+        range-padded row counts balanced across shards; the engine then
+        runs each shard's normalize→sample→compact→metrics chain as ONE
+        dispatch per kernel stage on that shard's device, keeps kept-index
+        sets and per-second counts device-resident until a single
+        ``materialize()`` host pass, and replays every scenario through
+        ONE multi-queue virtual-time loop.
 
         Parameters
         ----------
@@ -308,10 +189,17 @@ class Controller:
         scale, seed, queue_size :
             As in :meth:`run`.
         backend : {"auto", "numpy", "pallas"}
-            Passed through to NSA, the metrics engine, and the fidelity
-            matrix; every backend yields equivalent reports.
+            Passed through to the engine; ``"numpy"`` (and ``"auto"`` off
+            TPU) reproduces the sequential per-scenario reports bit-equal,
+            ``"pallas"`` keeps the whole reporting chain device-resident
+            (statistics within the documented 1e-3 tolerance).
         fidelity_window_s : int, default 60
             Sliding-mean window for the per-sweep fidelity matrices.
+        n_devices, host_index, n_hosts : int, optional
+            Plan-partition overrides (default: this process's jax
+            topology — see :func:`repro.streamsim.plan.plan_sweep`). In a
+            multi-host run every host builds the same plan and reports
+            only its own scenario slice into the shared repository.
 
         Returns
         -------
@@ -327,85 +215,50 @@ class Controller:
         -----
         As a side product, each sweep's full S×S trend-correlation matrix
         over [originals..., sims@max_range...] — the Fig.-6 fidelity
-        check — is computed by ONE batched
-        :func:`~repro.streamsim.metrics.trend_correlation_matrix` dispatch
-        per ``max_range`` (device-resident on the pallas backend), saved as
-        JSON under ``fidelity_dir``, and exposed on :attr:`last_fidelity`.
+        check — is computed from ONE batched dispatch chain per
+        ``max_range`` (consuming the engine's device-resident count rows
+        on the pallas backend), saved as JSON under ``fidelity_dir``, and
+        exposed on :attr:`last_fidelity`.
         """
-        datasets = list(datasets)
-        max_ranges = list(max_ranges)
-        originals, t_pre = {}, {}
-        for d in datasets:  # per-dataset timing, matching run()'s reports
-            t0 = time.perf_counter()
-            originals[d] = self.prepare(d, scale=scale, seed=seed)
-            t_pre[d] = time.perf_counter() - t0
-
-        scenarios = [(d, mr) for d in datasets for mr in max_ranges]
-        missing = [(d, mr) for d, mr in scenarios
-                   if not self.store.exists(f"{d}__sim{mr}")]
-        sims: Dict[tuple, Stream] = {}
-        nsa_s: Dict[tuple, float] = {}
-        t0 = time.perf_counter()
-        if missing:
-            # the whole store-missing grid in ONE range-padded dispatch
-            batch = nsa_sweep(originals, max_ranges, pairs=missing,
-                              backend=backend)
-            t_sweep = time.perf_counter() - t0
-            for (d, mr), sim in batch.items():
-                self.store.put(f"{d}__sim{mr}", sim, {"max_range": mr})
-        else:
-            batch, t_sweep = {}, 0.0
-        for sc in scenarios:
-            sims[sc] = batch[sc] if sc in batch else \
-                self.store.get(f"{sc[0]}__sim{sc[1]}")
-            nsa_s[sc] = t_sweep if sc in batch else 0.0
-        all_streams = [originals[d] for d in datasets] + \
-            [sims[s] for s in scenarios]
-        all_ranges: List[Optional[int]] = [None] * len(datasets) + \
-            [mr for _, mr in scenarios]
-        ms = metrics_batched(all_streams, all_ranges, backend=backend)
-        om = dict(zip(datasets, ms[:len(datasets)]))
-        sm = dict(zip(scenarios, ms[len(datasets):]))
-
-        # Fig.-6 fidelity: per sweep (max_range), the S×S trend-correlation
-        # matrix over [originals..., sims@mr...] from ONE batched dispatch
-        # (device-resident on the pallas backend — no per-pair host loop)
-        self.last_fidelity = []
-        for mr in max_ranges:
-            labels = [f"{d}/original" for d in datasets] + \
-                [f"{d}/sim{mr}" for d in datasets]
-            matrix = trend_correlation_matrix(
-                [om[d].counts for d in datasets] +
-                [sm[(d, mr)].counts for d in datasets],
-                window_s=fidelity_window_s, backend=backend)
-            fr = FidelityReport(mr, fidelity_window_s, labels,
-                                matrix.tolist())
+        originals, t_pre = self._prepare_all(datasets, scale, seed)
+        if _resolve_backend(backend) == "numpy":
+            # host mode ignores the partition; don't let the topology
+            # defaults force a jax runtime initialization on the pure
+            # numpy path
+            n_devices = 1 if n_devices is None else n_devices
+            host_index = 0 if host_index is None else host_index
+            n_hosts = 1 if n_hosts is None else n_hosts
+        plan = plan_sweep(self.store, datasets, max_ranges,
+                          {d: len(originals[d]) for d in datasets},
+                          scale=scale, seed=seed, n_devices=n_devices,
+                          host_index=host_index, n_hosts=n_hosts)
+        result = engine.execute_sweep(plan, originals, self.store,
+                                      backend=backend)
+        reports, fidelity = engine.run_sweep(
+            result, consumer, queue_size=queue_size,
+            fidelity_window_s=fidelity_window_s, t_pre=t_pre)
+        self.last_fidelity = fidelity
+        for fr in fidelity:
             self.save_fidelity(fr)
-            self.last_fidelity.append(fr)
-
-        # ONE virtual-time replay loop for the whole grid (per-scenario
-        # bounded queues; each scenario's consumer drains concurrently)
-        all_metrics, t_prod = self._produce_consume_many(
-            sims, consumer, queue_size)
-        reports = []
-        for d, mr in scenarios:
-            reports.append(self._report(
-                d, mr, originals[d], sims[(d, mr)], om[d], sm[(d, mr)],
-                (t_pre[d], nsa_s[(d, mr)], t_prod),
-                all_metrics[(d, mr)]))
+        for report in reports:
+            self.save_metrics(report)
         return reports
 
     # -------------------------------------------------- (3) metrics manager
+    def _unique_path(self, directory: Path, stem: str) -> Path:
+        """ms stamp + a monotonic per-controller sequence number: two
+        artifacts landing in the same millisecond (routine under
+        ``run_many``) must not overwrite each other; the existence loop
+        covers other controllers writing the same directory."""
+        path = directory / f"{stem}_{next(self._metrics_seq):06d}.json"
+        while path.exists():
+            path = directory / f"{stem}_{next(self._metrics_seq):06d}.json"
+        return path
+
     def save_metrics(self, report: SimulationReport) -> Path:
-        # ms stamp + a monotonic per-controller sequence number: two reports
-        # landing in the same millisecond (routine under run_many) must not
-        # overwrite each other
         stem = (f"{report.dataset}_max{report.max_range}_"
                 f"{int(time.time() * 1e3)}")
-        path = self.metrics_dir / f"{stem}_{next(self._metrics_seq):06d}.json"
-        while path.exists():  # other controllers writing the same directory
-            path = self.metrics_dir / \
-                f"{stem}_{next(self._metrics_seq):06d}.json"
+        path = self._unique_path(self.metrics_dir, stem)
         with open(path, "w") as f:
             json.dump(report.to_json(), f, indent=2, default=_np_default)
         return path
@@ -416,11 +269,7 @@ class Controller:
         its one-file-per-scenario contract)."""
         self.fidelity_dir.mkdir(parents=True, exist_ok=True)
         stem = f"fidelity_max{report.max_range}_{int(time.time() * 1e3)}"
-        path = self.fidelity_dir / \
-            f"{stem}_{next(self._metrics_seq):06d}.json"
-        while path.exists():
-            path = self.fidelity_dir / \
-                f"{stem}_{next(self._metrics_seq):06d}.json"
+        path = self._unique_path(self.fidelity_dir, stem)
         with open(path, "w") as f:
             json.dump(report.to_json(), f, indent=2, default=_np_default)
         return path

@@ -1,0 +1,717 @@
+"""Sweep engine — executes a :class:`~repro.streamsim.plan.SweepPlan`.
+
+The engine is the middle layer of the plan → engine → replay/report
+architecture:
+
+- **Execute** (:func:`execute_sweep`): runs every plan shard's NSA →
+  metrics chain as ONE dispatch per kernel stage on that shard's device,
+  producing a :class:`DeviceSweepResult` whose kept-index sets and
+  per-second counts stay **device-resident** — the handle chains
+  ``nsa_sweep_device`` straight into the fused metrics engine
+  (``ops.stream_metrics_batched_device``) with no host round-trip, and
+  only O(S) report scalars (kept totals, ``[Σq, Σq²]`` moments) cross to
+  host. Cache-hit scenarios and the original streams (host data by
+  construction) go through one batched host-input metrics call.
+- **Materialize** (:meth:`DeviceSweepResult.materialize`): the single
+  lazy host pass — kept indices gather the payload columns once and the
+  simulated streams land in the store. Until it runs, no per-scenario
+  per-record data touches host.
+- **Replay / report** (:func:`run_sweep`, :func:`replay_one`,
+  :func:`replay_many`, :func:`build_report`): the batched PSDA replay,
+  per-scenario :class:`SimulationReport` assembly, and the per-sweep
+  :class:`FidelityReport` matrices — consumed directly from the device
+  handles. ``Controller.run``/``run_many`` are thin drivers over these
+  functions; persistence (the metrics repository) stays in the
+  controller.
+
+Backend semantics
+-----------------
+``backend="numpy"`` (and ``"auto"`` off-TPU) runs the *host mode*: the
+exact pre-plan composition — per-scenario numpy NSA, one batched
+``metrics_batched`` call, f64 per-pair trend correlations — so reports
+are bit-equal to the sequential path. ``backend="pallas"`` (and
+``"auto"`` on TPU) runs the *device mode* above; NSA output is
+bit-identical, counts are bit-exact, and moments / trend correlations
+agree within the documented 1e-3 tolerance (f32 device statistics). Any
+:class:`~repro.kernels.ops.PallasDomainError` during the device chain
+falls back to host mode wholesale — never silently wrong output. The
+fallback keeps the caller's *metrics* backend (an NSA-only domain error
+does not demote in-domain pallas metrics — the pre-plan behaviour); only
+``backend="numpy"`` guarantees f64 host statistics throughout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.streamsim.metrics import (StreamMetrics, Volatility,
+                                     _volatility_from_moments,
+                                     metrics_batched,
+                                     trend_correlation_from_counts,
+                                     trend_correlation_matrix)
+from repro.streamsim.nsa import (_resolve_backend, compression_factor,
+                                 materialize_sweep, nsa, nsa_sweep_device)
+from repro.streamsim.plan import Shard, SweepPlan
+from repro.streamsim.preprocess import Stream
+from repro.streamsim.producer import (MultiQueueProducer, Producer,
+                                      VirtualClock)
+from repro.streamsim.queue import QueueGroup, StreamQueue
+
+#: sliding-mean window of the per-report trend correlation — the single
+#: source for the device chain AND its host fallback, so the two can
+#: never silently diverge (the per-sweep fidelity matrices use the
+#: caller's ``fidelity_window_s`` instead)
+REPORT_TREND_WINDOW_S = 60
+
+
+# ------------------------------------------------------------------ reports
+@dataclasses.dataclass
+class SimulationReport:
+    dataset: str
+    max_range: int
+    original_rows: int
+    simulated_rows: int
+    compression: float
+    original_volatility: Volatility
+    simulated_volatility: Volatility
+    trend_corr: float
+    preprocess_s: float
+    nsa_s: float
+    produce_s: float
+    consumer_metrics: Dict
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+@dataclasses.dataclass
+class FidelityReport:
+    """One sweep's Fig.-6 fidelity artifact from a ``run_many`` sweep.
+
+    ``trend_corr`` is the full S×S trend-correlation matrix over the
+    sweep's streams — every dataset's original stream followed by every
+    dataset's simulated stream at ``max_range`` — computed from ONE
+    batched dispatch chain (on the pallas backend the whole counts →
+    trend → correlation chain stays on device, consuming the engine's
+    device-resident count rows directly). ``labels[i]`` names row/column
+    ``i`` (``"<dataset>/original"`` or ``"<dataset>/sim<max_range>"``).
+    In a multi-host sweep each host's artifact covers the scenarios that
+    host reports (``labels`` records the subset).
+
+    Matrix entries for empty / zero-variance streams are NaN in memory and
+    serialize to ``null`` in :meth:`to_json` (bare ``NaN`` tokens are not
+    valid JSON and would break non-Python consumers of the artifact).
+    """
+
+    max_range: int
+    window_s: int
+    labels: List[str]
+    trend_corr: List[List[float]]
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["trend_corr"] = [[None if v != v else v for v in row]
+                           for row in self.trend_corr]
+        return d
+
+
+# ---------------------------------------------------------------- execution
+@dataclasses.dataclass
+class ShardResult:
+    """One shard's device-resident NSA + metrics output.
+
+    ``ss_kept``/``idx`` are the :func:`~repro.streamsim.nsa.
+    nsa_sweep_device` handles (still on the shard's device); ``hist`` is
+    the fused metrics engine's per-second count matrix, also
+    device-resident. Only ``totals`` and ``mom`` — O(rows) report
+    scalars — live on host.
+    """
+
+    shard: Shard
+    pairs: Tuple[Tuple[str, int], ...]
+    ss_kept: object          # (R, N) int32 device
+    idx: object              # (R, N) int32 device
+    totals: np.ndarray       # (R,) int64 host
+    hist: object             # (R, max_range) int32 device
+    mom: np.ndarray          # (R, 2) float64 host
+    nsa_s: float
+
+
+class DeviceSweepResult:
+    """Executed sweep: device-resident handles + lazy materialization.
+
+    Produced by :func:`execute_sweep`; consumed by :func:`run_sweep` /
+    :func:`build_report`. ``mode`` is ``"device"`` (pallas chain) or
+    ``"host"`` (the exact pre-plan numpy composition / wholesale
+    fallback).
+    """
+
+    def __init__(self, plan: SweepPlan, originals: Dict[str, Stream],
+                 store, backend: str, mode: str):
+        self.plan = plan
+        self.originals = originals
+        self.store = store
+        self.backend = backend
+        self.mode = mode
+        self.nsa_s: Dict[Tuple[str, int], float] = {}
+        self.shard_results: List[ShardResult] = []
+        #: cache-hit sims (host mode: ALL sims), loaded/computed on host
+        self.host_sims: Dict[Tuple[str, int], Stream] = {}
+        self.sm: Dict[Tuple[str, int], StreamMetrics] = {}  # host mode only
+        self._om: Dict[str, StreamMetrics] = {}
+        self._cached_sm: Dict[Tuple[str, int], StreamMetrics] = {}
+        self._host_group_done = False
+        self._sims: Optional[Dict[Tuple[str, int], Stream]] = None
+        self._persisted = False   # shard sims written to the store yet?
+        self._stats: Optional[Dict] = None
+        self._om_mat = None   # cached device upload of the originals' rows
+
+    @property
+    def om(self) -> Dict[str, StreamMetrics]:
+        """Per-dataset original-stream metrics — computed lazily (the
+        originals and cache-hit sims are host data by construction, so
+        their ONE batched host-input metrics call runs only when report
+        statistics are actually read, not on the sweep's hot path)."""
+        self._ensure_host_group()
+        return self._om
+
+    def _ensure_host_group(self) -> None:
+        if self._host_group_done:
+            return
+        self._host_group_done = True
+        datasets = list(self.plan.datasets)
+        cached = [s.scenario for s in self.plan.cached]
+        ms = metrics_batched(
+            [self.originals[d] for d in datasets] +
+            [self.host_sims[sc] for sc in cached],
+            [None] * len(datasets) + [mr for _, mr in cached],
+            backend=self.backend)
+        self._om = dict(zip(datasets, ms[:len(datasets)]))
+        self._cached_sm = dict(zip(cached, ms[len(datasets):]))
+
+    # ------------------------------------------------------------- topology
+    @property
+    def scenarios(self) -> Tuple[Tuple[str, int], ...]:
+        """The scenarios THIS process reports: the full grid in a
+        single-host run; cached + this host's shard scenarios otherwise
+        (each host of a ``jax.distributed`` sweep reports its own slice
+        into the shared metrics repository)."""
+        if self.plan.n_hosts == 1:
+            return tuple(s.scenario for s in self.plan.scenarios)
+        local = {s.scenario for s in self.plan.local_missing} | \
+            {s.scenario for s in self.plan.cached}
+        return tuple(s.scenario for s in self.plan.scenarios
+                     if s.scenario in local)
+
+    def _scenario_sources(self):
+        """scenario -> ("shard", shard_result, row) | ("host", None, None)"""
+        src = {sc: ("host", None, None) for sc in self.host_sims}
+        for sr in self.shard_results:
+            for r, sc in enumerate(sr.pairs):
+                src[sc] = ("shard", sr, r)
+        return src
+
+    # ---------------------------------------------------------------- stats
+    def _ensure_stats(self) -> Dict:
+        """Per-scenario report statistics, computed batched on first use.
+
+        Device mode: volatilities come from the O(S) moment scalars; all
+        per-pair trend correlations come from ONE fused device chain
+        (:func:`repro.kernels.ops.trend_corr_pairwise`) over the
+        device-resident count rows. Host mode: the f64 host statistics of
+        the pre-plan path.
+        """
+        if self._stats is not None:
+            return self._stats
+        stats: Dict[Tuple[str, int], Dict] = {}
+        if self.mode == "host":
+            for sc in self.scenarios:
+                stats[sc] = {
+                    "volatility": self.sm[sc].volatility,
+                    "trend_corr": trend_correlation_from_counts(
+                        self.om[sc[0]].counts, self.sm[sc].counts,
+                        REPORT_TREND_WINDOW_S),
+                }
+            self._stats = stats
+            return stats
+
+        self._ensure_host_group()
+        src = self._scenario_sources()
+        scenarios = list(self.scenarios)
+        if not scenarios:
+            self._stats = stats
+            return stats
+        for sc in scenarios:
+            kind, sr, r = src[sc]
+            if kind == "shard":
+                vol = _volatility_from_moments(
+                    float(sr.mom[r, 0]), float(sr.mom[r, 1]), sc[1])
+            else:
+                vol = self._cached_sm[sc].volatility
+            stats[sc] = {"volatility": vol}
+
+        corrs = self._pairwise_trend_corrs(scenarios, src)
+        for sc, r in zip(scenarios, corrs):
+            stats[sc]["trend_corr"] = float(r)
+        self._stats = stats
+        return stats
+
+    def _sim_count_rows(self, scenarios, src, width: int):
+        """Stack the scenarios' per-second count rows on device.
+
+        Shard rows are already device-resident histograms; cache-hit rows
+        (host data by construction) upload once as a group. Returns
+        ``(qmat (P, width) int32 device, lengths, totals)``.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        self._ensure_host_group()    # cache-hit rows need host metrics
+        groups, order = [], []       # group arrays + scenario positions
+        pos = {sc: p for p, sc in enumerate(scenarios)}
+        home = jax.local_devices()[0]   # the report-reduction device
+        for sr in self.shard_results:
+            rows = [sc for sc in sr.pairs if sc in pos]
+            if not rows:
+                continue
+            take = np.array([sr.pairs.index(sc) for sc in rows])
+            h = jnp.take(sr.hist, jnp.asarray(take), axis=0)
+            pad = width - h.shape[1]
+            if pad > 0:
+                h = jnp.concatenate(
+                    [h, jnp.zeros((h.shape[0], pad), h.dtype)], axis=1)
+            # shard rows live on their shard's device; the O(S·max_range)
+            # count rows hop device-to-device (never through a
+            # per-scenario host pass) for the cross-shard reduction
+            groups.append(jax.device_put(h[:, :width], home))
+            order.extend(pos[sc] for sc in rows)
+        hosted = [sc for sc in scenarios if src[sc][0] == "host"]
+        if hosted:
+            hmat = np.zeros((len(hosted), width), np.int32)
+            for i, sc in enumerate(hosted):
+                q = self._cached_sm[sc].counts
+                hmat[i, :min(len(q), width)] = q[:width]
+            groups.append(jnp.asarray(hmat))
+            order.extend(pos[sc] for sc in hosted)
+        qmat = jnp.concatenate(groups, axis=0)
+        perm = np.argsort(np.array(order), kind="stable")
+        qmat = jnp.take(qmat, jnp.asarray(perm), axis=0)
+        lengths = np.array([sc[1] for sc in scenarios], np.int64)
+        totals = np.array(
+            [src[sc][1].totals[src[sc][2]] if src[sc][0] == "shard"
+             else int(self._cached_sm[sc].counts.sum())
+             for sc in scenarios], np.int64)
+        return qmat, lengths, totals
+
+    def _orig_count_matrix(self):
+        """(D, W) int32 device matrix of the originals' count rows (one
+        upload for the whole sweep, cached) + per-dataset lengths/totals."""
+        import jax.numpy as jnp
+
+        if self._om_mat is not None:
+            return self._om_mat
+        datasets = list(self.plan.datasets)
+        trs = np.array([len(self.om[d].counts) for d in datasets], np.int64)
+        W = max(int(trs.max(initial=1)), 1)
+        mat = np.zeros((len(datasets), W), np.int32)
+        for i, d in enumerate(datasets):
+            mat[i, :trs[i]] = self.om[d].counts
+        totals = np.array([int(self.om[d].counts.sum())
+                           for d in datasets], np.int64)
+        self._om_mat = (jnp.asarray(mat), trs, totals,
+                        {d: i for i, d in enumerate(datasets)})
+        return self._om_mat
+
+    def _pairwise_trend_corrs(self, scenarios, src) -> np.ndarray:
+        """Every report's (original, simulated) trend correlation from one
+        fused device chain; falls back to the f64 host loop on domain
+        errors."""
+        from repro.kernels import ops
+
+        try:
+            om_mat, om_trs, om_totals, didx = self._orig_count_matrix()
+            rows = np.array([didx[sc[0]] for sc in scenarios])
+            width = max(int(sc[1]) for sc in scenarios)
+            qb, lb, sim_totals = self._sim_count_rows(scenarios, src, width)
+            totals = np.concatenate([om_totals, sim_totals])
+            # unique originals + a_index: each original's full-length
+            # trend is computed once per sweep, not once per scenario
+            return ops.trend_corr_pairwise(om_mat, om_trs, qb, lb,
+                                           REPORT_TREND_WINDOW_S,
+                                           totals=totals, a_index=rows)
+        except ops.PallasDomainError:
+            return np.array([trend_correlation_from_counts(
+                self.om[sc[0]].counts, self._counts_host(sc, src),
+                REPORT_TREND_WINDOW_S)
+                for sc in scenarios])
+
+    def _counts_host(self, sc, src) -> np.ndarray:
+        kind, sr, r = src[sc]
+        if kind == "host":
+            self._ensure_host_group()
+            return self._cached_sm[sc].counts
+        return np.asarray(sr.hist)[r, :sc[1]].astype(np.int64)
+
+    # ------------------------------------------------------------- fidelity
+    def fidelity(self, window_s: int = 60) -> List[FidelityReport]:
+        """One S×S trend-correlation matrix per ``max_range`` sweep, over
+        ``[originals..., sims@max_range...]`` — consumed straight from the
+        device-resident count rows in device mode.
+
+        In a multi-host run each host emits the SUB-matrix over the
+        scenarios it reports (its originals + owned sims at that
+        ``max_range``; the labels record which) — partial rows are never
+        silently dropped, and the per-host artifacts in the shared
+        repository jointly cover every original↔sim pair.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        datasets = list(self.plan.datasets)
+        out = []
+        reported = set(self.scenarios)
+        src = self._scenario_sources() if self.mode == "device" else {}
+        for mr in self.plan.max_ranges:
+            scs = [(d, mr) for d in datasets if (d, mr) in reported]
+            if not scs:
+                continue
+            row_ds = [d for d, _ in scs]
+            labels = [f"{d}/original" for d in row_ds] + \
+                [f"{d}/sim{mr}" for d in row_ds]
+            if self.mode == "host":
+                matrix = trend_correlation_matrix(
+                    [self.om[d].counts for d in row_ds] +
+                    [self.sm[(d, mr)].counts for d in row_ds],
+                    window_s=window_s, backend=self.backend)
+            else:
+                try:
+                    om_mat, om_trs, om_totals, didx = \
+                        self._orig_count_matrix()
+                    sel = np.array([didx[d] for d in row_ds])
+                    om_sel = jnp.take(om_mat, jnp.asarray(sel), axis=0)
+                    qb, lb, sim_totals = self._sim_count_rows(
+                        scs, src, max(int(om_sel.shape[1]), mr))
+                    pad = qb.shape[1] - om_sel.shape[1]
+                    if pad > 0:
+                        om_sel = jnp.concatenate(
+                            [om_sel, jnp.zeros((om_sel.shape[0], pad),
+                                               om_sel.dtype)], axis=1)
+                    qmat = jnp.concatenate([om_sel, qb], axis=0)
+                    lengths = np.concatenate([om_trs[sel], lb])
+                    totals = np.concatenate([om_totals[sel], sim_totals])
+                    matrix = ops.trend_correlation_batched_device(
+                        qmat, lengths, window_s, totals=totals)
+                except ops.PallasDomainError:
+                    matrix = trend_correlation_matrix(
+                        [self.om[d].counts for d in row_ds] +
+                        [self._counts_host((d, mr), src)
+                         for d in row_ds],
+                        window_s=window_s, backend="numpy")
+            out.append(FidelityReport(mr, window_s, labels,
+                                      np.asarray(matrix).tolist()))
+        return out
+
+    # ---------------------------------------------------------- materialize
+    def materialize(self, store=None) -> Dict[Tuple[str, int], Stream]:
+        """The single lazy host pass: gather every shard scenario's kept
+        payload columns from the device handles, persist the simulated
+        streams (``store`` defaults to the plan's store; pass ``False``
+        to skip persistence), and return the full scenario → Stream map.
+        The gather is idempotent (repeated calls reuse the cached
+        streams), but persistence is tracked separately: a later call
+        with a truthy/default ``store`` after an earlier
+        ``store=False`` peek still writes the streams out once.
+        """
+        store = self.store if store is None else store
+        if self._sims is None:
+            sims: Dict[Tuple[str, int], Stream] = dict(self.host_sims)
+            for sr in self.shard_results:
+                sims.update(materialize_sweep(
+                    self.originals, list(sr.pairs), sr.ss_kept, sr.idx,
+                    sr.totals))
+            self._sims = {sc: sims[sc] for sc in self.scenarios}
+        if store and not self._persisted:
+            shard_scs = [sc for sr in self.shard_results
+                         for sc in sr.pairs]
+            store.put_many(
+                {f"{d}__sim{mr}": self._sims[(d, mr)]
+                 for d, mr in shard_scs if (d, mr) in self._sims},
+                {f"{d}__sim{mr}": {"max_range": mr}
+                 for d, mr in shard_scs})
+            self._persisted = True
+        return self._sims
+
+
+def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
+                  backend: str = "auto",
+                  multiple_mode: str = "time") -> DeviceSweepResult:
+    """Execute a plan's NSA + metrics stages (layer 2 of the sweep).
+
+    Device mode (resolved ``"pallas"``): each shard runs ONE
+    normalize→sample→compact chain committed to its device
+    (:func:`~repro.streamsim.nsa.nsa_sweep_device`) chained straight into
+    ONE fused metrics dispatch
+    (:func:`~repro.kernels.ops.stream_metrics_batched_device`) — the kept
+    stamps never visit host. Originals and cache-hit sims (host data) go
+    through one batched host-input metrics call. Any
+    :class:`~repro.kernels.ops.PallasDomainError` (or an empty source
+    stream) falls back to host mode wholesale.
+
+    Host mode (resolved ``"numpy"``): the exact pre-plan composition —
+    per-scenario numpy NSA + one ``metrics_batched`` call over
+    ``[originals..., sims...]`` — bit-equal reports.
+
+    Returns a :class:`DeviceSweepResult`; NSA wall time is recorded per
+    scenario (the shared shard total for co-simulated scenarios, 0.0 for
+    cache hits) and the simulated streams are **not** yet materialized.
+    """
+    resolved = _resolve_backend(backend)
+    missing = list(plan.local_missing)
+    device_ok = (resolved == "pallas" and
+                 all(len(originals[s.dataset]) > 0 for s in missing))
+    if device_ok:
+        result = _execute_device(plan, originals, store, backend,
+                                 multiple_mode)
+        if result is not None:
+            return result
+    return _execute_host(plan, originals, store, backend, multiple_mode)
+
+
+def _execute_device(plan, originals, store, backend, multiple_mode
+                    ) -> Optional[DeviceSweepResult]:
+    """The pallas path; returns None when a domain error demands the
+    wholesale host fallback."""
+    import jax
+
+    from repro.kernels import ops
+
+    result = DeviceSweepResult(plan, originals, store, backend, "device")
+    devices = jax.local_devices()
+    total_nsa = 0.0
+    try:
+        for shard in plan.shards:
+            pairs = tuple(s.scenario for s in shard.specs)
+            dev = devices[shard.device_index % len(devices)]
+            t0 = time.perf_counter()
+            ss_kept, idx, totals, _ = nsa_sweep_device(
+                originals, pairs, multiple_mode=multiple_mode, device=dev)
+            # compaction packed every row's kept stamps to the front, so
+            # the metrics dispatch only needs the kept-width column slice
+            # (device slice — kept counts are far below the padded source
+            # width after compression)
+            n_kept = int(-(-max(int(totals.max(initial=1)), 1)
+                           // ops.TILE) * ops.TILE)
+            hist, mom = ops.stream_metrics_batched_device(
+                ss_kept[:, :min(n_kept, ss_kept.shape[1])], totals,
+                shard.max_range)
+            mom_host = np.asarray(mom, np.float64)   # O(rows) scalars
+            dt = time.perf_counter() - t0
+            total_nsa += dt
+            result.shard_results.append(ShardResult(
+                shard=shard, pairs=pairs, ss_kept=ss_kept, idx=idx,
+                totals=np.asarray(totals, np.int64), hist=hist,
+                mom=mom_host, nsa_s=dt))
+    except ops.PallasDomainError:
+        return None   # out-of-domain scenario: host mode, wholesale
+
+    for spec in plan.cached:
+        result.host_sims[spec.scenario] = store.get(spec.store_key)
+    # originals + cache-hit sims are host data by construction; their ONE
+    # batched host-input metrics call is deferred (``_ensure_host_group``)
+    # until report statistics are read, keeping the sweep's hot path free
+    # of it
+    for sc in (s.scenario for s in plan.scenarios):
+        result.nsa_s[sc] = 0.0
+    for sr in result.shard_results:
+        for sc in sr.pairs:
+            result.nsa_s[sc] = total_nsa
+    return result
+
+
+def _execute_host(plan, originals, store, backend, multiple_mode
+                  ) -> DeviceSweepResult:
+    """The host path — the exact pre-plan ``run_many`` composition."""
+    result = DeviceSweepResult(plan, originals, store, backend, "host")
+    t0 = time.perf_counter()
+    for spec in plan.local_missing:
+        result.host_sims[spec.scenario] = nsa(
+            originals[spec.dataset], spec.max_range,
+            multiple_mode=multiple_mode, backend="numpy")
+    t_sweep = time.perf_counter() - t0
+    if store:
+        for spec in plan.local_missing:
+            store.put(spec.store_key, result.host_sims[spec.scenario],
+                      {"max_range": spec.max_range})
+    for spec in plan.cached:
+        result.host_sims[spec.scenario] = store.get(spec.store_key)
+    for spec in plan.scenarios:
+        result.nsa_s[spec.scenario] = \
+            0.0 if spec.cached else t_sweep
+    scenarios = [sc for sc in (s.scenario for s in plan.scenarios)
+                 if sc in result.host_sims]
+    datasets = list(plan.datasets)
+    ms = metrics_batched(
+        [originals[d] for d in datasets] +
+        [result.host_sims[sc] for sc in scenarios],
+        [None] * len(datasets) + [mr for _, mr in scenarios],
+        backend=backend)
+    result._om = dict(zip(datasets, ms[:len(datasets)]))
+    result.sm = dict(zip(scenarios, ms[len(datasets):]))
+    result._host_group_done = True   # one dispatch covered everything
+    result._sims = {sc: result.host_sims[sc] for sc in scenarios}
+    return result
+
+
+# -------------------------------------------------------------- PSDA replay
+def replay_one(sim: Stream, consumer, queue_size: int):
+    """Single-scenario PSDA leg (``Controller.run``): producer thread
+    fills a bounded queue, the consumer drains it on the CALLING thread
+    (so ``run``'s consumer needs no thread safety)."""
+    queue = StreamQueue(maxsize=queue_size)
+    producer = Producer(sim, queue, clock=VirtualClock())
+    t0 = time.perf_counter()
+    status = [None]
+
+    def _produce():
+        status[0] = producer.run()
+
+    th = threading.Thread(target=_produce, daemon=True)
+    th.start()
+    consumer_metrics = consumer(queue)
+    th.join()
+    t_prod = time.perf_counter() - t0
+    if status[0] != 0:
+        raise RuntimeError("producer reported fault status")
+    return ({**consumer_metrics, **queue.stats(), **producer.stats()},
+            t_prod)
+
+
+def replay_many(sims: Dict, consumer, queue_size: int):
+    """Batched PSDA leg: ONE
+    :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
+    loop interleaves every scenario's buckets; each scenario's consumer
+    drains its own bounded queue in its own thread (shared backpressure
+    makes concurrent drains mandatory — a full sibling queue stalls the
+    whole loop). Returns ``({scenario: merged stats}, shared wall time)``
+    with per-scenario stats equivalent to sequential :func:`replay_one`
+    calls.
+
+    Raises
+    ------
+    RuntimeError
+        If ANY scenario's consumer raises: every failure is aggregated
+        into one error naming the failed scenarios, with the scenario
+        exceptions chained via ``__cause__`` (first failure outermost) so
+        no traceback is swallowed. Also raised on a producer fault
+        status.
+    """
+    group = QueueGroup(sims, maxsize=queue_size)
+    producer = MultiQueueProducer(sims, group.queues, clock=VirtualClock())
+    status = [None]
+    results: Dict = {}
+    errors: List[Tuple[object, BaseException]] = []
+
+    def _produce():
+        status[0] = producer.run()
+
+    def _consume(key):
+        try:
+            results[key] = consumer(group[key])
+        except Exception as exc:  # keep the producer loop drainable
+            errors.append((key, exc))
+            for _ in group[key]:
+                pass
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=_produce, daemon=True)]
+    threads += [threading.Thread(target=_consume, args=(key,),
+                                 daemon=True) for key in sims]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    t_prod = time.perf_counter() - t0
+    if errors:
+        order = {key: i for i, key in enumerate(sims)}
+        errors.sort(key=lambda ke: order[ke[0]])
+        cause = None
+        for _, exc in reversed(errors):   # chain: first failure outermost
+            # a consumer exception may already carry its own __cause__
+            # chain — link the NEXT failure to that chain's tail so no
+            # failure becomes unreachable
+            tail, seen = exc, {id(exc)}
+            while tail.__cause__ is not None and id(tail.__cause__) \
+                    not in seen:
+                tail = tail.__cause__
+                seen.add(id(tail))
+            if tail.__cause__ is None and tail is not cause:
+                tail.__cause__ = cause
+            cause = exc
+        detail = "; ".join(f"{key!r}: {exc!r}" for key, exc in errors)
+        raise RuntimeError(
+            f"{len(errors)} of {len(sims)} sweep consumer(s) failed: "
+            f"{detail}") from cause
+    if status[0] != 0:
+        raise RuntimeError("producer reported fault status")
+    return ({key: {**results[key], **group[key].stats(),
+                   **producer.stats(key)} for key in sims}, t_prod)
+
+
+# ----------------------------------------------------------- report assembly
+def build_report(result: DeviceSweepResult, scenario: Tuple[str, int],
+                 t_pre: float, t_prod: float,
+                 consumer_metrics: Dict) -> SimulationReport:
+    """Assemble one scenario's :class:`SimulationReport` from the executed
+    sweep's statistics (device-mode stats never gathered more than O(S)
+    scalars to build this)."""
+    d, mr = scenario
+    stats = result._ensure_stats()[scenario]
+    original = result.originals[d]
+    sims = result.materialize()
+    return SimulationReport(
+        dataset=d,
+        max_range=mr,
+        original_rows=len(original),
+        simulated_rows=len(sims[scenario]),
+        compression=compression_factor(original, mr),
+        original_volatility=result.om[d].volatility,
+        simulated_volatility=stats["volatility"],
+        trend_corr=stats["trend_corr"],
+        preprocess_s=t_pre,
+        nsa_s=result.nsa_s[scenario],
+        produce_s=t_prod,
+        consumer_metrics=consumer_metrics,
+    )
+
+
+def run_sweep(result: DeviceSweepResult, consumer, *,
+              queue_size: int = 64, fidelity_window_s: int = 60,
+              t_pre: Optional[Dict[str, float]] = None
+              ) -> Tuple[List[SimulationReport], List[FidelityReport]]:
+    """Layer 3: fidelity matrices → materialize → batched replay → reports.
+
+    The full report tail of ``Controller.run_many``, consuming the
+    :class:`DeviceSweepResult` directly: fidelity is computed from the
+    device-resident count rows BEFORE the single
+    :meth:`~DeviceSweepResult.materialize` host pass, every scenario then
+    replays through ONE multi-queue virtual-time loop, and one
+    :class:`SimulationReport` per scenario is assembled in grid order.
+    Persistence of both artifacts stays with the caller (the controller's
+    metrics repository).
+    """
+    t_pre = t_pre or {}
+    fidelity = result.fidelity(fidelity_window_s)
+    result._ensure_stats()        # device stats before the host pass
+    sims = result.materialize()
+    all_metrics, t_prod = replay_many(sims, consumer, queue_size)
+    reports = [build_report(result, sc, t_pre.get(sc[0], 0.0), t_prod,
+                            all_metrics[sc])
+               for sc in result.scenarios]
+    return reports, fidelity

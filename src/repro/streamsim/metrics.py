@@ -25,9 +25,12 @@ keep the documented 1e-3 relative tolerance (the variance subtraction can
 amplify the moment error).
 
 :func:`metrics_batched` evaluates S streams — possibly with different time
-ranges — through ONE batched engine dispatch, which is what
-``Controller.run`` / ``Controller.run_many`` use so the whole reporting path
-re-reads each stream once instead of ~4 times.
+ranges — through ONE batched engine dispatch; the sweep engine
+(:mod:`repro.streamsim.engine`) uses it for host-side streams (originals,
+store-cache hits) and the device-input ops forms
+(``ops.stream_metrics_batched_device``, ``ops.trend_corr_pairwise``) for
+store-missing scenarios, so the whole reporting path re-reads each stream
+once instead of ~4 times and never gathers kept stamps to host.
 
 :func:`trend` is an O(n) cumulative-sum sliding mean (window sums via two
 prefix-sum lookups), replacing the seed's O(n·window) ``np.convolve``. On

@@ -374,21 +374,79 @@ def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
             any(len(streams[name]) == 0 for name, _ in pairs):
         return _host()
     from repro.kernels import ops
+    try:
+        ss_kept, idx_b, totals, _ = nsa_sweep_device(
+            streams, pairs, multiple_mode=multiple_mode)
+    except ops.PallasDomainError:
+        # some scenario falls outside the kernel's exactness domain
+        return _host()
+    return materialize_sweep(streams, pairs, ss_kept, idx_b, totals)
+
+
+def nsa_sweep_device(streams: Dict[str, Stream],
+                     pairs: Sequence[Tuple[str, int]], *,
+                     multiple_mode: str = "time", device=None):
+    """The device leg of the range-padded sweep — NO host gather.
+
+    Runs ONE ``stream_sample`` dispatch plus ONE batched compaction for
+    the given scenario rows and returns device-resident handles, so a
+    caller (the sweep engine) can chain the kept scale stamps straight
+    into the fused metrics engine without a host round-trip; the payload
+    gather is deferred to :func:`materialize_sweep`.
+
+    Parameters
+    ----------
+    streams, pairs, multiple_mode :
+        As in :func:`nsa_sweep` (``pairs`` is required here — this is the
+        plan-driven entry point). Streams must be non-empty.
+    device : optional
+        jax device the whole chain is committed to (one plan shard per
+        device).
+
+    Returns
+    -------
+    (ss_kept, idx, totals, lengths)
+        ``ss_kept`` int32 ``(R, N)`` device — row ``r``'s first
+        ``totals[r]`` entries are the kept scale stamps (tail entries are
+        clipped-gather garbage; mask by ``totals``). ``idx`` int32
+        ``(R, N)`` device — kept-record indices, sentinel ``N`` past each
+        row's total. ``totals`` int64 ``(R,)`` host (the O(R) scalars);
+        ``lengths`` int64 ``(R,)`` host source lengths.
+
+    Raises
+    ------
+    PallasDomainError
+        When any scenario falls outside the kernels' exactness domain —
+        callers fall back to the numpy path wholesale.
+    """
     import jax.numpy as jnp
+    from repro.kernels import ops
 
     ts = [streams[name].t for name, _ in pairs]
     mults = [_multiple(len(streams[name]), streams[name].time_range, mr,
                        multiple_mode) for name, mr in pairs]
-    try:
-        ss_b, keep_b, lengths = ops.stream_sample_batched(
-            ts, [mr for _, mr in pairs], mults)
-    except ops.PallasDomainError:
-        # some scenario falls outside the kernel's exactness domain
-        return _host()
+    ss_b, keep_b, lengths = ops.stream_sample_batched(
+        ts, [mr for _, mr in pairs], mults, device=device)
     idx_b, totals = ops.compact_mask_batched(keep_b)
     N = idx_b.shape[1]
-    ss_kept_b = np.asarray(jnp.take_along_axis(
-        ss_b, jnp.clip(idx_b, 0, max(N - 1, 0)), axis=1)).astype(np.int64)
+    ss_kept = jnp.take_along_axis(ss_b, jnp.clip(idx_b, 0, max(N - 1, 0)),
+                                  axis=1)
+    return ss_kept, idx_b, totals, lengths
+
+
+def materialize_sweep(streams: Dict[str, Stream],
+                      pairs: Sequence[Tuple[str, int]],
+                      ss_kept, idx_b, totals) -> Dict[Tuple[str, int],
+                                                      Stream]:
+    """The single host pass of the device sweep: gather payload columns.
+
+    Takes the handles of :func:`nsa_sweep_device`, moves the kept stamp /
+    index matrices to host ONCE, and fancy-indexes each scenario's
+    timestamp and payload columns (which may be float64/strings — not
+    device-representable without loss). This is the only place a sweep's
+    per-record data crosses to host.
+    """
+    ss_host = np.asarray(ss_kept).astype(np.int64)
     idx_host = np.asarray(idx_b)
     out = {}
     for r, (name, mr) in enumerate(pairs):
@@ -398,7 +456,7 @@ def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
             name=src.name,
             t=src.t[idx],
             payload={k: v[idx] for k, v in src.payload.items()},
-            scale_stamp=ss_kept_b[r, :total],
+            scale_stamp=ss_host[r, :total],
         )
     return out
 

@@ -18,16 +18,21 @@ scale_stamp), not a per-record loop — the beyond-paper optimization; the
 per-record variant is kept for the §Perf baseline comparison.
 
 :class:`MultiQueueProducer` is the batched-replay form: S scenarios'
-non-empty buckets interleave in ONE virtual-time loop over a merged
-scale-stamp timeline, each scenario feeding its own bounded queue
+non-empty buckets interleave in ONE loop over a merged scale-stamp
+timeline, each scenario feeding its own bounded queue
 (:class:`repro.streamsim.queue.QueueGroup`) — so a whole (dataset ×
 max_range) sweep replays with one loop's host work instead of S sequential
-loops, while every scenario's consumer observes exactly the sequence and
-``emit_time`` stamps of a sequential :meth:`Producer.run`.
+loops, while every scenario's consumer observes exactly the sequence of a
+sequential :meth:`Producer.run` (and, under the virtual clock, the exact
+``emit_time`` stamps too). Under a :class:`RealClock` the loop is a
+heap-based timer wheel: one wall-clock loop fires every scenario's bucket
+at its due second, so live demos can drive several SPS consumers at once
+without one timer thread per stream.
 """
 
 from __future__ import annotations
 
+import heapq
 import threading
 import time
 from typing import Callable, Dict, Mapping, Optional
@@ -206,40 +211,42 @@ class MultiQueueProducer:
 
     The batched counterpart of :class:`Producer`: every scenario's
     non-empty buckets are merged into a single ascending scale-stamp
-    timeline, and one virtual-time loop walks it — sleeping each gap once
-    for ALL scenarios instead of once per scenario. Per simulated second,
-    every scenario with a bucket there emits it (in the scenarios' given
-    order) to its own queue.
+    timeline, and one loop walks it. Per simulated second, every scenario
+    with a bucket there emits it (in the scenarios' given order) to its
+    own queue.
+
+    Under a :class:`VirtualClock` (tests, CPU benchmarks,
+    ``Controller.run_many``) the walk is the gap-batched virtual-time
+    loop: each empty-second gap costs one ``sleep`` for the WHOLE sweep.
+    Under any other clock (:class:`RealClock` — live demos driving
+    several SPS consumers at once) the walk is a heap-based timer wheel
+    (:meth:`_run_timer_wheel`): each merged event is popped from a heap
+    keyed by its due wall time and emitted when that time arrives, so S
+    scenarios replay off ONE wall-clock loop instead of S timer threads.
 
     Equivalence contract (tested): for each scenario the consumer observes
-    exactly what a sequential ``Producer(stream, queue,
-    clock=VirtualClock()).run()`` produces — same bucket sequence, same
-    per-bucket ``emit_time`` stamps (bucket ``b`` emits at clock ``(b + 1)
-    * tick_s`` since every scenario's timeline starts at virtual 0), same
-    queue stats, and each scenario's queue closes right after its last
-    bucket. Only the shared loop's *final* clock value differs per
-    scenario (it runs to the sweep's last stamp).
+    exactly what a sequential ``Producer(stream, queue).run()`` produces —
+    same bucket sequence, same queue stats, same producer stats, and each
+    scenario's queue closes right after its last bucket. Under the
+    virtual clock the per-bucket ``emit_time`` stamps are also identical
+    (bucket ``b`` emits at clock ``(b + 1) * tick_s``); under a real
+    clock ``emit_time`` is the wall time the wheel fired (the sequential
+    real-clock producer's semantics). Only the shared loop's *final*
+    clock value differs per scenario (it runs to the sweep's last stamp).
 
     Backpressure is shared: one full queue stalls the loop (and therefore
     every scenario) until its consumer drains — so consumers must run
-    concurrently, one per queue. ``run()`` requires a
-    :class:`VirtualClock` (batched replay is a simulation-side tool; real
-    wall-clock replay keeps the per-stream paper producer).
+    concurrently, one per queue.
     """
 
     def __init__(self, streams: Mapping, queues: Mapping,
-                 clock: Optional[VirtualClock] = None, tick_s: float = 1.0,
+                 clock: Optional[object] = None, tick_s: float = 1.0,
                  on_emit: Optional[Callable[[object, Bucket], None]] = None):
         if set(streams) != set(queues):
             raise ValueError("streams and queues must share the same keys")
         self.streams = dict(streams)
         self.queues = {k: queues[k] for k in self.streams}
         self.clock = clock if clock is not None else VirtualClock()
-        if not isinstance(self.clock, VirtualClock):
-            raise ValueError(
-                "MultiQueueProducer interleaves simulated timelines and "
-                "needs a VirtualClock; use per-stream Producer for "
-                "wall-clock replay")
         self.tick_s = tick_s
         self.on_emit = on_emit
         self.emitted_buckets: Dict[object, int] = {k: 0 for k in self.streams}
@@ -253,8 +260,12 @@ class MultiQueueProducer:
         ``sleep`` for the WHOLE sweep, not one per scenario. Per-scenario
         state (timestamp/payload columns, queue, counters) is hoisted into
         index-addressed locals before the loop, so the per-event cost
-        matches the sequential :class:`Producer` hot path.
+        matches the sequential :class:`Producer` hot path. Non-virtual
+        clocks take the timer-wheel walk instead
+        (:meth:`_run_timer_wheel`).
         """
+        if not isinstance(self.clock, VirtualClock):
+            return self._run_timer_wheel()
         try:
             keys = list(self.streams)
             # hoisted per-scenario state, addressed by scenario index
@@ -306,6 +317,77 @@ class MultiQueueProducer:
                         # scenario done: close so its consumer can finish
                         # without waiting for the rest of the sweep
                         queues[i].close()
+            for i, key in enumerate(keys):
+                self.emitted_buckets[key] = n_buckets[i]
+                self.emitted_records[key] = n_records[i]
+            return STATUS_SUCCESS
+        except Exception:
+            for q in self.queues.values():
+                q.close()
+            return STATUS_FAULT
+
+    def _run_timer_wheel(self) -> int:
+        """Wall-clock batched replay: ONE heap of due times feeds S queues.
+
+        Every scenario's non-empty buckets become timer events due at
+        ``t0 + (b + 1) * tick_s`` — the sequential :class:`Producer`'s
+        schedule (bucket ``b`` fires after ``b + 1`` ticks). The wheel
+        pops the earliest event, sleeps until its due time, emits the
+        bucket, and pushes that scenario's next one — S live consumers
+        ride one loop and one heap instead of S chained-timer threads
+        (Algorithm 2 spawned a ``threading.Timer`` per tick per stream).
+        Ties fire in scenario order (heap entries carry the scenario
+        index), matching the virtual-time walk; a bounded queue that
+        fills stalls the wheel exactly like the virtual loop (shared
+        backpressure — consumers must drain concurrently). Per-scenario
+        bucket sequence, queue stats, and producer stats equal the
+        sequential per-stream replay; ``emit_time`` is the wall time the
+        wheel fired.
+        """
+        try:
+            keys = list(self.streams)
+            t_cols = [self.streams[k].t for k in keys]
+            payloads = [list(self.streams[k].payload.items()) for k in keys]
+            queues = [self.queues[k] for k in keys]
+            clock, tick_s, on_emit = self.clock, self.tick_s, self.on_emit
+            n_buckets = [0] * len(keys)
+            n_records = [0] * len(keys)
+            slices, events = [], []
+            heap = []
+            for i, key in enumerate(keys):
+                sl, _ = _group_by_scale_stamp(self.streams[key])
+                slices.append(sl)
+                bs = sorted(sl)
+                events.append(bs)
+                if bs:
+                    heap.append((bs[0], i, 0))
+                else:
+                    queues[i].close()          # empty stream: nothing to emit
+            heapq.heapify(heap)
+            t0 = clock.time()
+            while heap:
+                b, i, j = heapq.heappop(heap)
+                delay = t0 + (b + 1) * tick_s - clock.time()
+                if delay > 0:
+                    clock.sleep(delay)
+                sl = slices[i][b]
+                bucket = Bucket(
+                    scale_stamp=b,
+                    t=t_cols[i][sl],
+                    payload={k: v[sl] for k, v in payloads[i]},
+                    emit_time=clock.time(),
+                )
+                queues[i].put(bucket)
+                n_buckets[i] += 1
+                n_records[i] += len(bucket)
+                if on_emit is not None:
+                    on_emit(keys[i], bucket)
+                if j + 1 < len(events[i]):
+                    heapq.heappush(heap, (events[i][j + 1], i, j + 1))
+                else:
+                    # scenario done: close so its consumer can finish
+                    # without waiting for the rest of the sweep
+                    queues[i].close()
             for i, key in enumerate(keys):
                 self.emitted_buckets[key] = n_buckets[i]
                 self.emitted_records[key] = n_records[i]

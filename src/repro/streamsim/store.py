@@ -84,6 +84,17 @@ class StreamStore:
             if os.path.exists(tmp):
                 os.unlink(tmp)
 
+    def put_many(self, items: Dict[str, Stream],
+                 extra_meta: Optional[Dict[str, Dict]] = None) -> None:
+        """Persist several streams in one pass (the sweep engine's
+        ``materialize()`` uses this so a whole sweep's store round-trip is
+        one call, not one per scenario). ``extra_meta`` optionally maps
+        each key to its manifest extras. Atomicity stays per stream —
+        a crash mid-batch leaves every already-written stream intact."""
+        extra_meta = extra_meta or {}
+        for key, stream in items.items():
+            self.put(key, stream, extra_meta.get(key))
+
     # ------------------------------------------------------------------- get
     def get(self, key: str) -> Stream:
         d = self._dir(key)

@@ -197,17 +197,18 @@ class TestRunManyFidelity:
 
     def test_one_matrix_dispatch_per_sweep(self, tmp_path, monkeypatch):
         # S×S fidelity comes from ONE batched matrix call per max_range —
-        # not a per-pair (or per-scenario) host loop
-        import repro.streamsim.controller as controller
+        # not a per-pair (or per-scenario) host loop (the matrix call
+        # lives in the engine's report layer since the plan/engine split)
+        import repro.streamsim.engine as engine
 
         calls = []
-        real = controller.trend_correlation_matrix
+        real = engine.trend_correlation_matrix
 
         def _counting(counts, *a, **k):
             calls.append(len(counts))
             return real(counts, *a, **k)
 
-        monkeypatch.setattr(controller, "trend_correlation_matrix",
+        monkeypatch.setattr(engine, "trend_correlation_matrix",
                             _counting)
         datasets, max_ranges = ["traffic", "sogouq"], [40, 80]
         c = Controller(str(tmp_path / "fid"))
