@@ -1,0 +1,137 @@
+"""PR 6 trajectory rows: checkpointed resume + chaos-layer noop cost.
+
+Two rows quantify what the robustness layer costs (nothing, when off)
+and buys (skipped work, when a killed sweep resumes):
+
+- ``sweep_resume_3x4_k8`` — a 3-dataset × 4-time-range sweep (12
+  scenarios) whose checkpoint namespace already carries report markers
+  for 8 completed scenarios, exactly the state a sweep killed after 8
+  scenarios leaves behind. NEW: ``Controller.run_many(checkpoint=True)``
+  loads the 8 finished reports straight from their markers and
+  re-plans/replays only the remaining 4 scenarios. OLD (the path it
+  replaces): the same killed sweep restarted from zero — every scenario
+  re-replayed, every report re-assembled. The win is deterministic
+  (resume does a strict subset of the rerun's replay/report work, plus
+  O(k) marker reads), so the row is gated by ``check_regression.py``.
+
+- ``chaos_noop_replay_12`` — the same 12 scenarios through
+  ``replay_many`` with a seeded all-noop :class:`FaultPlan` attached vs
+  no plan at all. The fault hooks short-circuit on a noop spec (the
+  delivered stream is bit-identical — tested in tests/test_faults.py),
+  so this row documents the measured overhead of carrying the chaos
+  layer disabled. Informative, not gated: the two paths are near-equal
+  by design and a strict ≤ gate would flake on scheduler noise.
+
+Both rows run at reduced scale off-TPU and carry the usual ``@`` suffix
+so trend tooling never mixes incommensurable sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import List
+
+from repro.kernels import ops
+from repro.streamsim import FaultPlan, plan_sweep
+from repro.streamsim.controller import Controller
+from repro.streamsim.engine import replay_many
+from repro.streamsim.resilience import SweepCheckpoint
+
+DATASETS = ("sogouq", "traffic", "userbehavior")
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _tmin(fn, reps=3):
+    """(result, min-of-reps seconds) — min is robust to scheduler noise."""
+    out, best = fn(), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        best = min(best, time.perf_counter() - t0)
+        assert r == out, "non-deterministic benchmark result"
+    return out, best
+
+
+def _consumer(queue):
+    return {"records_seen": sum(len(b) for b in queue)}
+
+
+def run(csv: List[str]) -> None:
+    if ops.on_tpu():
+        scale, tag = 0.05, ""
+    else:
+        scale = 0.002 if QUICK else 0.004
+        tag = f"@scale{scale}"
+    ranges = (15, 30, 45, 60)
+    datasets = list(DATASETS)
+    reps = 2 if QUICK else 4
+    seed = 9
+    k = 8                              # scenarios "completed" before the kill
+    grid = [(d, mr) for d in datasets for mr in ranges]
+
+    tmp = tempfile.mkdtemp(prefix="bench_pr6_")
+    try:
+        ctrl = Controller(os.path.join(tmp, "store"))
+        # setup sweep: warms the store's NSA cache (both timed paths see
+        # identical cache hits) and yields the reports a killed run would
+        # have checkpointed before dying
+        setup_reports = ctrl.run_many(datasets, ranges, _consumer,
+                                      scale=scale, seed=seed)
+        row_counts = {d: len(ctrl.prepare(d, scale=scale, seed=seed))
+                      for d in datasets}
+        plan = plan_sweep(ctrl.store, datasets, ranges, row_counts,
+                          scale=scale, seed=seed, n_devices=1,
+                          host_index=0, n_hosts=1)
+
+        # --- resume-from-k vs restart-from-zero --------------------------
+        def _resumed():
+            # recreate the killed sweep's marker state (run_many clears
+            # the namespace on completion, so each rep starts identical)
+            ckpt = SweepCheckpoint(ctrl.store, plan.sweep_id)
+            for r in setup_reports[:k]:
+                ckpt.mark_report(r)
+            out = ctrl.run_many(datasets, ranges, _consumer, scale=scale,
+                                seed=seed, checkpoint=True)
+            return sum(r.consumer_metrics["records_seen"] for r in out)
+
+        def _restart_from_zero():
+            out = ctrl.run_many(datasets, ranges, _consumer, scale=scale,
+                                seed=seed)
+            return sum(r.consumer_metrics["records_seen"] for r in out)
+
+        got_new, dt_new = _tmin(_resumed, reps=reps)
+        got_old, dt_old = _tmin(_restart_from_zero, reps=reps)
+        assert got_new == got_old, "resumed and restarted sweeps must " \
+            f"deliver identical record totals ({got_new} vs {got_old})"
+        csv.append(
+            f"PR6/sweep_resume_3x4_k8{tag},{dt_new*1e6:.0f},"
+            f"scenarios={len(grid)};resumed_from={k};"
+            f"restart_from_zero_us={dt_old*1e6:.0f};"
+            f"speedup={dt_old/max(dt_new, 1e-9):.1f}x")
+
+        # --- noop chaos layer vs no chaos layer --------------------------
+        sims = {(d, mr): ctrl.simulate(d, mr, scale=scale, seed=seed)
+                for d, mr in grid}
+
+        def _noop_plan():
+            metrics, _ = replay_many(sims, _consumer, 64,
+                                     fault_plan=FaultPlan(seed=13))
+            return sum(m["records_seen"] for m in metrics.values())
+
+        def _no_plan():
+            metrics, _ = replay_many(sims, _consumer, 64)
+            return sum(m["records_seen"] for m in metrics.values())
+
+        got_noop, dt_noop = _tmin(_noop_plan, reps=reps)
+        got_plain, dt_plain = _tmin(_no_plan, reps=reps)
+        assert got_noop == got_plain, "a noop fault plan must deliver " \
+            f"bit-identical streams ({got_noop} vs {got_plain})"
+        csv.append(
+            f"PR6/chaos_noop_replay_12{tag},{dt_noop*1e6:.0f},"
+            f"scenarios={len(grid)};no_plan_path_us={dt_plain*1e6:.0f};"
+            f"overhead={dt_noop/max(dt_plain, 1e-9):.2f}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

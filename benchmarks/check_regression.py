@@ -13,6 +13,10 @@ as a ``*_us`` derived field on the row):
 - ``PR5/device_resident_report_64`` vs ``host_gather_path_us`` — the
   device-resident report chain must beat the host-gather + per-scenario
   loop it replaced.
+- ``PR6/sweep_resume_3x4_k8`` vs ``restart_from_zero_us`` — resuming a
+  killed checkpointed sweep (8 of 12 scenarios already marked done) must
+  beat restarting it from zero (guards the marker-read overhead and any
+  accidental re-replay of completed scenarios).
 
 Structural regressions (an accidental per-scenario dispatch loop, a
 padding blowup, a host round-trip creeping back in) show up as
@@ -36,6 +40,7 @@ GATES = {
     "PR4/sweep_single_dispatch_3x6": "per_range_path_us",
     "PR5/sweep_sharded_4dev_8x6": "pr4_single_dispatch_us",
     "PR5/device_resident_report_64": "host_gather_path_us",
+    "PR6/sweep_resume_3x4_k8": "restart_from_zero_us",
 }
 
 

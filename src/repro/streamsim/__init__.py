@@ -7,7 +7,10 @@ Pipeline stages (paper Fig. 4):
   SPS   -> consumer side: repro.training / repro.serving
 
 Supporting pieces: synthetic datasets, the stream store ("database"),
-the Kafka-analogue bounded queue, volatility metrics, and the controller.
+the Kafka-analogue bounded queue, volatility metrics, the controller,
+and the robustness layer — seeded fault injection
+(:mod:`repro.streamsim.faults`) plus retry/breaker/deadline/checkpoint
+primitives (:mod:`repro.streamsim.resilience`).
 """
 
 from repro.streamsim.datasets import (  # noqa: F401
@@ -35,7 +38,24 @@ from repro.streamsim.metrics import (  # noqa: F401
     volatility,
 )
 from repro.streamsim.store import StreamStore  # noqa: F401
-from repro.streamsim.queue import QueueGroup, StreamQueue  # noqa: F401
+from repro.streamsim.queue import (  # noqa: F401
+    ByteBudget,
+    QueueGroup,
+    StreamQueue,
+)
+from repro.streamsim.faults import (  # noqa: F401
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedConsumerCrash,
+)
+from repro.streamsim.resilience import (  # noqa: F401
+    BreakerOpen,
+    CircuitBreaker,
+    Deadline,
+    RetryPolicy,
+    SweepCheckpoint,
+)
 from repro.streamsim.producer import (  # noqa: F401
     MultiQueueProducer,
     Producer,

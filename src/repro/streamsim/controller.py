@@ -32,10 +32,12 @@ from repro.streamsim.datasets import make_stream
 # Report dataclasses live in the engine's report layer now; re-exported
 # here because the controller is their historical import location.
 from repro.streamsim.engine import FidelityReport, SimulationReport  # noqa: F401
+from repro.streamsim.faults import FaultPlan
 from repro.streamsim.nsa import _resolve_backend, nsa
 from repro.streamsim.plan import plan_sweep
 from repro.streamsim.preprocess import Stream, preprocess
 from repro.streamsim.queue import StreamQueue
+from repro.streamsim.resilience import RetryPolicy, SweepCheckpoint
 from repro.streamsim.store import StreamStore
 
 
@@ -157,7 +159,15 @@ class Controller:
                  backend: str = "auto", fidelity_window_s: int = 60,
                  n_devices: Optional[int] = None,
                  host_index: Optional[int] = None,
-                 n_hosts: Optional[int] = None) -> List[SimulationReport]:
+                 n_hosts: Optional[int] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 breaker_threshold: int = 3,
+                 consumer_deadline_s: Optional[float] = None,
+                 on_failure: str = "raise",
+                 max_bytes: Optional[int] = None,
+                 retention_policy: str = "block",
+                 checkpoint: bool = False) -> List[SimulationReport]:
         """The Tables 1-3 scenario sweep (datasets × time ranges), planned
         and executed by the sweep engine.
 
@@ -200,6 +210,32 @@ class Controller:
             topology — see :func:`repro.streamsim.plan.plan_sweep`). In a
             multi-host run every host builds the same plan and reports
             only its own scenario slice into the shared repository.
+        fault_plan : FaultPlan, optional
+            Seeded per-scenario chaos schedule (drops / duplicates /
+            reorders / jitter / stalls / consumer crashes) injected into
+            the replay — see :mod:`repro.streamsim.faults`.
+        retry_policy, breaker_threshold, consumer_deadline_s, on_failure :
+            The replay resilience knobs, passed through to
+            :func:`repro.streamsim.engine.replay_many`: solo retries with
+            capped exponential backoff, a per-scenario circuit breaker,
+            a consumer deadline that surfaces a wedged consumer as a
+            named scenario failure instead of hanging ``join()`` forever,
+            and ``on_failure="degrade"`` to turn terminal failures into
+            ``status="partial"`` reports instead of raising.
+        max_bytes, retention_policy :
+            Optional shared byte budget across the sweep's queues (broker
+            retention — ``"block"`` or ``"drop_oldest"``); see
+            :class:`repro.streamsim.queue.ByteBudget`.
+        checkpoint : bool, default False
+            Persist per-scenario completion markers through the stream
+            store (namespace: :attr:`~repro.streamsim.plan.SweepPlan.
+            sweep_id`). A killed sweep re-invoked with the same arguments
+            resumes from the last completed scenario: finished scenarios'
+            reports load from their markers, only the remainder is
+            re-simulated/replayed, and the markers are cleared once the
+            whole sweep completes. (Resume re-plans only the remaining
+            scenarios, so its fidelity matrices cover the resumed subset;
+            single-host sweeps are the intended scope.)
 
         Returns
         -------
@@ -228,20 +264,53 @@ class Controller:
             n_devices = 1 if n_devices is None else n_devices
             host_index = 0 if host_index is None else host_index
             n_hosts = 1 if n_hosts is None else n_hosts
-        plan = plan_sweep(self.store, datasets, max_ranges,
-                          {d: len(originals[d]) for d in datasets},
+        row_counts = {d: len(originals[d]) for d in datasets}
+        plan = plan_sweep(self.store, datasets, max_ranges, row_counts,
                           scale=scale, seed=seed, n_devices=n_devices,
                           host_index=host_index, n_hosts=n_hosts)
-        result = engine.execute_sweep(plan, originals, self.store,
-                                      backend=backend)
-        reports, fidelity = engine.run_sweep(
-            result, consumer, queue_size=queue_size,
-            fidelity_window_s=fidelity_window_s, t_pre=t_pre)
-        self.last_fidelity = fidelity
-        for fr in fidelity:
-            self.save_fidelity(fr)
+        ckpt: Optional[SweepCheckpoint] = None
+        prior: Dict = {}
+        grid = [s.scenario for s in plan.scenarios]
+        if plan.n_hosts > 1:
+            local = {s.scenario for s in plan.local_missing} | \
+                {s.scenario for s in plan.cached}
+            grid = [sc for sc in grid if sc in local]
+        if checkpoint:
+            ckpt = SweepCheckpoint(self.store, plan.sweep_id)
+            done = set(ckpt.done_scenarios()) & set(grid)
+            if done:
+                # resume: completed scenarios' reports come straight from
+                # their markers; only the remainder is planned and run
+                prior = {sc: r for sc, r in ckpt.load_reports().items()
+                         if sc in done}
+                remaining = [sc for sc in grid if sc not in done]
+                plan = None if not remaining else plan_sweep(
+                    self.store, datasets, max_ranges, row_counts,
+                    scale=scale, seed=seed, pairs=remaining,
+                    n_devices=n_devices, host_index=host_index,
+                    n_hosts=n_hosts)
+        new_reports: List[SimulationReport] = []
+        if plan is not None:
+            result = engine.execute_sweep(plan, originals, self.store,
+                                          backend=backend, checkpoint=ckpt)
+            new_reports, fidelity = engine.run_sweep(
+                result, consumer, queue_size=queue_size,
+                fidelity_window_s=fidelity_window_s, t_pre=t_pre,
+                fault_plan=fault_plan, retry_policy=retry_policy,
+                breaker_threshold=breaker_threshold,
+                consumer_deadline_s=consumer_deadline_s,
+                on_failure=on_failure, max_bytes=max_bytes,
+                retention_policy=retention_policy, checkpoint=ckpt)
+            self.last_fidelity = fidelity
+            for fr in fidelity:
+                self.save_fidelity(fr)
+        by_sc = dict(prior)
+        by_sc.update({(r.dataset, r.max_range): r for r in new_reports})
+        reports = [by_sc[sc] for sc in grid]
         for report in reports:
             self.save_metrics(report)
+        if ckpt is not None:
+            ckpt.clear()     # sweep complete: the next run starts fresh
         return reports
 
     # -------------------------------------------------- (3) metrics manager

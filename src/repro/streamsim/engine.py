@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.streamsim.faults import FaultPlan
 from repro.streamsim.metrics import (StreamMetrics, Volatility,
                                      _volatility_from_moments,
                                      metrics_batched,
@@ -61,6 +62,8 @@ from repro.streamsim.preprocess import Stream
 from repro.streamsim.producer import (MultiQueueProducer, Producer,
                                       VirtualClock)
 from repro.streamsim.queue import QueueGroup, StreamQueue
+from repro.streamsim.resilience import (CircuitBreaker, Deadline,
+                                        RetryPolicy, SweepCheckpoint)
 
 #: sliding-mean window of the per-report trend correlation — the single
 #: source for the device chain AND its host fallback, so the two can
@@ -84,10 +87,27 @@ class SimulationReport:
     nsa_s: float
     produce_s: float
     consumer_metrics: Dict
+    #: "ok", or "partial" when the scenario's consumer failed persistently
+    #: and the sweep degraded it instead of failing (resilience layer)
+    status: str = "ok"
+    failure: Optional[str] = None   #: repr of the terminal consumer error
+    attempts: int = 1               #: replay attempts consumed (1 = clean)
 
     def to_json(self) -> Dict:
         d = dataclasses.asdict(self)
         return d
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "SimulationReport":
+        """Rebuild a report from its :meth:`to_json` payload (checkpoint
+        markers round-trip reports through JSON on sweep resume)."""
+        d = dict(d)
+        for f in ("original_volatility", "simulated_volatility"):
+            v = d[f]
+            if isinstance(v, dict):
+                d[f] = Volatility(**v)
+        known = {fld.name for fld in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 @dataclasses.dataclass
@@ -171,6 +191,9 @@ class DeviceSweepResult:
         self._persisted = False   # shard sims written to the store yet?
         self._stats: Optional[Dict] = None
         self._om_mat = None   # cached device upload of the originals' rows
+        #: optional SweepCheckpoint; materialize() then persists
+        #: per-scenario completion markers for crash-resume
+        self.checkpoint: Optional[SweepCheckpoint] = None
 
     @property
     def om(self) -> Dict[str, StreamMetrics]:
@@ -446,12 +469,18 @@ class DeviceSweepResult:
                 {f"{d}__sim{mr}": {"max_range": mr}
                  for d, mr in shard_scs})
             self._persisted = True
+            if self.checkpoint is not None:
+                # resume marker: these scenarios' streams are now durable
+                # (their stream is a store cache hit on the next attempt)
+                self.checkpoint.mark_materialized(
+                    [s.scenario for s in self.plan.local_missing])
         return self._sims
 
 
 def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
-                  backend: str = "auto",
-                  multiple_mode: str = "time") -> DeviceSweepResult:
+                  backend: str = "auto", multiple_mode: str = "time",
+                  checkpoint: Optional[SweepCheckpoint] = None
+                  ) -> DeviceSweepResult:
     """Execute a plan's NSA + metrics stages (layer 2 of the sweep).
 
     Device mode (resolved ``"pallas"``): each shard runs ONE
@@ -476,12 +505,19 @@ def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
     missing = list(plan.local_missing)
     device_ok = (resolved == "pallas" and
                  all(len(originals[s.dataset]) > 0 for s in missing))
+    result = None
     if device_ok:
         result = _execute_device(plan, originals, store, backend,
                                  multiple_mode)
-        if result is not None:
-            return result
-    return _execute_host(plan, originals, store, backend, multiple_mode)
+    if result is None:
+        result = _execute_host(plan, originals, store, backend,
+                               multiple_mode)
+    result.checkpoint = checkpoint
+    if checkpoint is not None and result.mode == "host" and store:
+        # host mode persists its sims eagerly inside _execute_host
+        checkpoint.mark_materialized(
+            [s.scenario for s in plan.local_missing])
+    return result
 
 
 def _execute_device(plan, originals, store, backend, multiple_mode
@@ -570,12 +606,14 @@ def _execute_host(plan, originals, store, backend, multiple_mode
 
 
 # -------------------------------------------------------------- PSDA replay
-def replay_one(sim: Stream, consumer, queue_size: int):
+def replay_one(sim: Stream, consumer, queue_size: int, faults=None):
     """Single-scenario PSDA leg (``Controller.run``): producer thread
     fills a bounded queue, the consumer drains it on the CALLING thread
-    (so ``run``'s consumer needs no thread safety)."""
+    (so ``run``'s consumer needs no thread safety). ``faults`` optionally
+    attaches one scenario's :class:`~repro.streamsim.faults.
+    FaultInjector` schedule to the producer."""
     queue = StreamQueue(maxsize=queue_size)
-    producer = Producer(sim, queue, clock=VirtualClock())
+    producer = Producer(sim, queue, clock=VirtualClock(), faults=faults)
     t0 = time.perf_counter()
     status = [None]
 
@@ -593,7 +631,56 @@ def replay_one(sim: Stream, consumer, queue_size: int):
             t_prod)
 
 
-def replay_many(sims: Dict, consumer, queue_size: int):
+def _replay_solo(key, sim: Stream, consumer, queue_size: int,
+                 deadline_s: Optional[float], faults) -> Dict:
+    """One scenario's retry replay (the resilience layer's unit of work):
+    fresh bounded queue + producer thread, the consumer on its own
+    deadline-joined thread. Returns the merged per-scenario stats or
+    raises the consumer's error (``TimeoutError`` on a blown deadline).
+    """
+    queue = StreamQueue(maxsize=queue_size)
+    producer = Producer(sim, queue, clock=VirtualClock(), faults=faults)
+    status = [None]
+    box: Dict = {}
+
+    def _produce():
+        status[0] = producer.run()
+
+    def _consume():
+        try:
+            box["result"] = consumer(queue)
+        except Exception as exc:   # keep the producer drainable
+            box["error"] = exc
+            for _ in queue:
+                pass
+
+    tp = threading.Thread(target=_produce, daemon=True)
+    tc = threading.Thread(target=_consume, daemon=True)
+    deadline = Deadline(deadline_s)
+    tp.start()
+    tc.start()
+    tc.join(deadline.remaining())
+    if tc.is_alive():
+        queue.close()              # unblock a get()-parked consumer; the
+        tc.join(5.0)               # producer sheds via the closed queue
+        raise TimeoutError(
+            f"consumer deadline ({deadline_s}s) exceeded for {key!r}")
+    tp.join()
+    if "error" in box:
+        raise box["error"]
+    if status[0] != 0:
+        raise RuntimeError("producer reported fault status")
+    return {**box["result"], **queue.stats(), **producer.stats()}
+
+
+def replay_many(sims: Dict, consumer, queue_size: int, *,
+                fault_plan: Optional[FaultPlan] = None,
+                retry_policy: Optional[RetryPolicy] = None,
+                breaker_threshold: int = 3,
+                consumer_deadline_s: Optional[float] = None,
+                on_failure: str = "raise",
+                max_bytes: Optional[int] = None,
+                retention_policy: str = "block"):
     """Batched PSDA leg: ONE
     :class:`~repro.streamsim.producer.MultiQueueProducer` virtual-time
     loop interleaves every scenario's buckets; each scenario's consumer
@@ -603,65 +690,181 @@ def replay_many(sims: Dict, consumer, queue_size: int):
     with per-scenario stats equivalent to sequential :func:`replay_one`
     calls.
 
+    Resilience layer (all off by default — the fault-free defaults are
+    bit-identical to the pre-resilience engine):
+
+    - ``fault_plan`` injects the seeded chaos schedule into the producer
+      walk and wraps each consumer with its crash schedule.
+    - ``consumer_deadline_s`` bounds the joint consumer joins: a consumer
+      still running at the deadline with buckets available (or its stream
+      closed) is *wedged* — its queue is closed (the producer walk sheds
+      just that scenario) and it fails with a named ``TimeoutError``
+      instead of hanging the sweep; *starved* consumers (empty open
+      queue — victims of shared backpressure behind the wedged sibling)
+      get a short post-shed grace join.
+    - ``retry_policy`` retries each failed scenario solo with capped
+      exponential backoff; each retry rewinds the scenario's fault
+      schedule (``FaultInjector.reset``) while the crash-attempt counter
+      advances, so a transient injected crash heals deterministically.
+    - a per-scenario :class:`~repro.streamsim.resilience.CircuitBreaker`
+      (``breaker_threshold`` consecutive failures) stops burning backoff
+      budget on a persistently-broken consumer.
+    - ``on_failure="degrade"`` converts terminal failures into partial
+      per-scenario stats (``degraded``/``failed``/``attempts``/
+      ``breaker`` + transport counters) instead of raising, so one broken
+      scenario no longer fails the whole sweep.
+    - ``max_bytes``/``retention_policy`` put the queue group under a
+      shared byte budget (broker retention; see
+      :class:`~repro.streamsim.queue.ByteBudget`).
+
     Raises
     ------
     RuntimeError
-        If ANY scenario's consumer raises: every failure is aggregated
-        into one error naming the failed scenarios, with the scenario
-        exceptions chained via ``__cause__`` (first failure outermost) so
-        no traceback is swallowed. Also raised on a producer fault
-        status.
+        With ``on_failure="raise"`` (default), if ANY scenario's consumer
+        terminally fails: every failure is aggregated into one error
+        naming the failed scenarios, with the scenario exceptions chained
+        via ``__cause__`` (first failure outermost) so no traceback is
+        swallowed. Also raised on a producer fault status.
     """
-    group = QueueGroup(sims, maxsize=queue_size)
-    producer = MultiQueueProducer(sims, group.queues, clock=VirtualClock())
+    if on_failure not in ("raise", "degrade"):
+        raise ValueError(
+            f"on_failure must be 'raise' or 'degrade', got {on_failure!r}")
+    group = QueueGroup(sims, maxsize=queue_size, max_bytes=max_bytes,
+                       retention_policy=retention_policy)
+    producer = MultiQueueProducer(sims, group.queues, clock=VirtualClock(),
+                                  fault_plan=fault_plan)
+    wrapped = {key: (fault_plan.wrap_consumer(key, consumer)
+                     if fault_plan is not None else consumer)
+               for key in sims}
     status = [None]
     results: Dict = {}
-    errors: List[Tuple[object, BaseException]] = []
+    errors: Dict[object, BaseException] = {}
 
     def _produce():
         status[0] = producer.run()
 
     def _consume(key):
         try:
-            results[key] = consumer(group[key])
+            results[key] = wrapped[key](group[key])
         except Exception as exc:  # keep the producer loop drainable
-            errors.append((key, exc))
+            errors[key] = exc
             for _ in group[key]:
                 pass
 
     t0 = time.perf_counter()
-    threads = [threading.Thread(target=_produce, daemon=True)]
-    threads += [threading.Thread(target=_consume, args=(key,),
-                                 daemon=True) for key in sims]
-    for th in threads:
+    prod_th = threading.Thread(target=_produce, daemon=True)
+    cons = {key: threading.Thread(target=_consume, args=(key,),
+                                  daemon=True) for key in sims}
+    prod_th.start()
+    for th in cons.values():
         th.start()
-    for th in threads:
-        th.join()
+    deadline = Deadline(consumer_deadline_s)
+    for th in cons.values():
+        th.join(deadline.remaining())    # None remaining == join forever
+    for key, th in cons.items():
+        if not th.is_alive():
+            continue
+        q = group[key]
+        if q.qsize() > 0 or q.closed:
+            # wedged: buckets available (or stream over) yet not
+            # finishing — shed it so the walk and its siblings complete
+            errors[key] = TimeoutError(
+                f"consumer deadline ({consumer_deadline_s}s) exceeded "
+                f"for {key!r}")
+            q.close()
+    prod_th.join()
+    # post-shed grace: starved consumers (empty queue behind the wedged
+    # sibling's backpressure) finish quickly once the producer resumed;
+    # already-errored (wedged) threads are abandoned, not re-joined
+    grace = Deadline(5.0 if consumer_deadline_s is not None else None)
+    for key, th in cons.items():
+        if key in errors:
+            continue
+        if th.is_alive():
+            th.join(grace.remaining())
+        if th.is_alive():
+            errors[key] = TimeoutError(
+                f"consumer deadline ({consumer_deadline_s}s) exceeded "
+                f"for {key!r}")
+            group[key].close()
     t_prod = time.perf_counter() - t0
+
+    # ---- phase 2: solo retries with backoff, behind the breaker
+    attempts = {key: 1 for key in errors}
+    breaker_state = {key: "closed" for key in errors}
+    # separate dict: an abandoned (wedged) consumer thread may still
+    # write ``results[key]`` concurrently; retries must not race it
+    solo_results: Dict = {}
+    for key in [k for k in sims if k in errors]:
+        breaker = CircuitBreaker(breaker_threshold)
+        breaker.record_failure()            # the joint-loop failure
+        breaker_state[key] = breaker.state
+        if retry_policy is None:
+            continue
+        inj = (fault_plan.injector(key)
+               if fault_plan is not None and
+               not fault_plan.is_noop_for(key) else None)
+        while attempts[key] < retry_policy.max_attempts and breaker.allow():
+            time.sleep(retry_policy.delay(attempts[key], key))
+            attempts[key] += 1
+            if inj is not None:
+                inj.reset()                 # same transport schedule;
+            try:                            # crash attempts still advance
+                merged = _replay_solo(key, sims[key], wrapped[key],
+                                      queue_size, consumer_deadline_s, inj)
+                merged["retries"] = attempts[key] - 1
+                solo_results[key] = merged
+                breaker.record_success()
+                del errors[key]
+                break
+            except Exception as retry_exc:
+                errors[key] = retry_exc
+                breaker.record_failure()
+        breaker_state[key] = breaker.state
+
+    # ---- phase 3: assemble / degrade / raise
+    all_metrics: Dict = {}
+    for key in sims:
+        if key in errors:
+            continue
+        if key in solo_results:             # solo stats already merged
+            all_metrics[key] = solo_results[key]
+        else:
+            all_metrics[key] = {**results[key], **group[key].stats(),
+                                **producer.stats(key)}
     if errors:
-        order = {key: i for i, key in enumerate(sims)}
-        errors.sort(key=lambda ke: order[ke[0]])
-        cause = None
-        for _, exc in reversed(errors):   # chain: first failure outermost
-            # a consumer exception may already carry its own __cause__
-            # chain — link the NEXT failure to that chain's tail so no
-            # failure becomes unreachable
-            tail, seen = exc, {id(exc)}
-            while tail.__cause__ is not None and id(tail.__cause__) \
-                    not in seen:
-                tail = tail.__cause__
-                seen.add(id(tail))
-            if tail.__cause__ is None and tail is not cause:
-                tail.__cause__ = cause
-            cause = exc
-        detail = "; ".join(f"{key!r}: {exc!r}" for key, exc in errors)
-        raise RuntimeError(
-            f"{len(errors)} of {len(sims)} sweep consumer(s) failed: "
-            f"{detail}") from cause
+        if on_failure == "degrade":
+            for key in errors:
+                all_metrics[key] = {
+                    "degraded": True,
+                    "failed": repr(errors[key]),
+                    "attempts": attempts[key],
+                    "breaker": breaker_state[key],
+                    **group[key].stats(),
+                    **producer.stats(key),
+                }
+        else:
+            ordered = [(key, errors[key]) for key in sims if key in errors]
+            cause = None
+            for _, exc in reversed(ordered):  # first failure outermost
+                # a consumer exception may already carry its own
+                # __cause__ chain — link the NEXT failure to that chain's
+                # tail so no failure becomes unreachable
+                tail, seen = exc, {id(exc)}
+                while tail.__cause__ is not None and id(tail.__cause__) \
+                        not in seen:
+                    tail = tail.__cause__
+                    seen.add(id(tail))
+                if tail.__cause__ is None and tail is not cause:
+                    tail.__cause__ = cause
+                cause = exc
+            detail = "; ".join(f"{key!r}: {exc!r}" for key, exc in ordered)
+            raise RuntimeError(
+                f"{len(ordered)} of {len(sims)} sweep consumer(s) failed: "
+                f"{detail}") from cause
     if status[0] != 0:
         raise RuntimeError("producer reported fault status")
-    return ({key: {**results[key], **group[key].stats(),
-                   **producer.stats(key)} for key in sims}, t_prod)
+    return all_metrics, t_prod
 
 
 # ----------------------------------------------------------- report assembly
@@ -670,11 +873,14 @@ def build_report(result: DeviceSweepResult, scenario: Tuple[str, int],
                  consumer_metrics: Dict) -> SimulationReport:
     """Assemble one scenario's :class:`SimulationReport` from the executed
     sweep's statistics (device-mode stats never gathered more than O(S)
-    scalars to build this)."""
+    scalars to build this). Degraded replay metrics (``on_failure=
+    "degrade"``) yield a ``status="partial"`` report carrying the
+    terminal failure instead of failing report assembly."""
     d, mr = scenario
     stats = result._ensure_stats()[scenario]
     original = result.originals[d]
     sims = result.materialize()
+    degraded = bool(consumer_metrics.get("degraded"))
     return SimulationReport(
         dataset=d,
         max_range=mr,
@@ -688,12 +894,24 @@ def build_report(result: DeviceSweepResult, scenario: Tuple[str, int],
         nsa_s=result.nsa_s[scenario],
         produce_s=t_prod,
         consumer_metrics=consumer_metrics,
+        status="partial" if degraded else "ok",
+        failure=consumer_metrics.get("failed") if degraded else None,
+        attempts=int(consumer_metrics.get(
+            "attempts", consumer_metrics.get("retries", 0) + 1)),
     )
 
 
 def run_sweep(result: DeviceSweepResult, consumer, *,
               queue_size: int = 64, fidelity_window_s: int = 60,
-              t_pre: Optional[Dict[str, float]] = None
+              t_pre: Optional[Dict[str, float]] = None,
+              fault_plan: Optional[FaultPlan] = None,
+              retry_policy: Optional[RetryPolicy] = None,
+              breaker_threshold: int = 3,
+              consumer_deadline_s: Optional[float] = None,
+              on_failure: str = "raise",
+              max_bytes: Optional[int] = None,
+              retention_policy: str = "block",
+              checkpoint: Optional[SweepCheckpoint] = None
               ) -> Tuple[List[SimulationReport], List[FidelityReport]]:
     """Layer 3: fidelity matrices → materialize → batched replay → reports.
 
@@ -704,14 +922,25 @@ def run_sweep(result: DeviceSweepResult, consumer, *,
     replays through ONE multi-queue virtual-time loop, and one
     :class:`SimulationReport` per scenario is assembled in grid order.
     Persistence of both artifacts stays with the caller (the controller's
-    metrics repository).
+    metrics repository). The resilience keywords pass straight through to
+    :func:`replay_many`; ``checkpoint`` persists each report's completion
+    marker as soon as it is assembled, so a sweep killed after k reports
+    resumes with exactly k scenarios done.
     """
     t_pre = t_pre or {}
     fidelity = result.fidelity(fidelity_window_s)
     result._ensure_stats()        # device stats before the host pass
     sims = result.materialize()
-    all_metrics, t_prod = replay_many(sims, consumer, queue_size)
-    reports = [build_report(result, sc, t_pre.get(sc[0], 0.0), t_prod,
-                            all_metrics[sc])
-               for sc in result.scenarios]
+    all_metrics, t_prod = replay_many(
+        sims, consumer, queue_size, fault_plan=fault_plan,
+        retry_policy=retry_policy, breaker_threshold=breaker_threshold,
+        consumer_deadline_s=consumer_deadline_s, on_failure=on_failure,
+        max_bytes=max_bytes, retention_policy=retention_policy)
+    reports = []
+    for sc in result.scenarios:
+        r = build_report(result, sc, t_pre.get(sc[0], 0.0), t_prod,
+                         all_metrics[sc])
+        if checkpoint is not None:
+            checkpoint.mark_report(r)     # marker lands per report, so a
+        reports.append(r)                 # kill leaves a clean prefix
     return reports, fidelity

@@ -115,6 +115,18 @@ class SweepPlan:
         """The store-missing scenarios this host's shards cover."""
         return tuple(s for sh in self.shards for s in sh.specs)
 
+    @property
+    def sweep_id(self) -> str:
+        """Stable identity of the sweep *configuration* (grid + scale +
+        seed + host slot) — the checkpoint namespace key. Deliberately
+        independent of cache-hit state: a restarted run whose first
+        attempt already materialized some scenarios must still find its
+        own markers."""
+        import hashlib
+        ident = repr((tuple(self.datasets), tuple(self.max_ranges),
+                      self.scale, self.seed, self.host_index, self.n_hosts))
+        return hashlib.sha256(ident.encode()).hexdigest()[:16]
+
     def padded_area(self) -> int:
         """Σ shard cost — the kernel work the plan actually dispatches."""
         return sum(sh.cost for sh in self.shards)

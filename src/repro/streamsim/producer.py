@@ -28,6 +28,25 @@ sequential :meth:`Producer.run` (and, under the virtual clock, the exact
 heap-based timer wheel: one wall-clock loop fires every scenario's bucket
 at its due second, so live demos can drive several SPS consumers at once
 without one timer thread per stream.
+
+Fault injection (chaos layer)
+-----------------------------
+Both producers accept a seeded fault schedule
+(:mod:`repro.streamsim.faults`): ``Producer(faults=<FaultInjector>)`` and
+``MultiQueueProducer(fault_plan=<FaultPlan>)``. Scheduled drops,
+duplicates, bounded reorders, delay jitter, and producer stalls are
+applied at the emission point; every event is counted and surfaced in
+``stats()`` (``fault_*`` keys, present only when a schedule is attached),
+so per-scenario delivery reconciles as ``delivered == emitted - dropped +
+duplicated``. A no-op schedule leaves the replay **bit-identical** to the
+fault-free pipeline.
+
+Both multi-queue walks also tolerate a member queue being closed under
+them (the engine's consumer-deadline watchdog does exactly that to shed a
+wedged scenario): the dead scenario's remaining buckets are counted as
+``aborted_buckets`` and every other scenario replays to completion,
+instead of the whole sweep loop dying on the first
+``RuntimeError("queue closed")``.
 """
 
 from __future__ import annotations
@@ -39,6 +58,7 @@ from typing import Callable, Dict, Mapping, Optional
 
 import numpy as np
 
+from repro.streamsim.faults import FaultInjector, FaultPlan
 from repro.streamsim.preprocess import Stream
 from repro.streamsim.queue import Bucket, StreamQueue
 
@@ -90,36 +110,88 @@ def _group_by_scale_stamp(stream: Stream):
     return slices, max_range
 
 
+def _dup_bucket(bucket: Bucket) -> Bucket:
+    """A duplicate delivery: fresh Bucket object, shared column views
+    (the transport re-sent the message, it did not copy the records)."""
+    return Bucket(scale_stamp=bucket.scale_stamp, t=bucket.t,
+                  payload=bucket.payload, emit_time=bucket.emit_time)
+
+
 class Producer:
     """Sends the simulated stream to the SPS in chronological order.
 
-    ``run()`` returns the paper's status code (success:0 / fault:1)."""
+    ``run()`` returns the paper's status code (success:0 / fault:1).
+    ``faults`` optionally attaches one scenario's deterministic fault
+    schedule (:class:`repro.streamsim.faults.FaultInjector`); the caller
+    owns the schedule lifecycle (``reset()`` it before re-running the
+    same stream, as the engine's retry path does)."""
 
     def __init__(self, stream: Stream, queue: StreamQueue,
                  clock: Optional[object] = None,
                  tick_s: float = 1.0,
-                 on_emit: Optional[Callable[[Bucket], None]] = None):
+                 on_emit: Optional[Callable[[Bucket], None]] = None,
+                 faults: Optional[FaultInjector] = None):
         self.stream = stream
         self.queue = queue
         self.clock = clock if clock is not None else VirtualClock()
         self.tick_s = tick_s
         self.on_emit = on_emit
+        self.faults = faults
         self.emitted_buckets = 0
         self.emitted_records = 0
+        self.aborted_buckets = 0
 
     # ------------------------------------------------------------- emission
     def _emit(self, b: int, sl: slice) -> None:
+        faults = self.faults
+        if faults is None or faults.spec.is_noop:
+            bucket = Bucket(
+                scale_stamp=b,
+                t=self.stream.t[sl],
+                payload={k: v[sl] for k, v in self.stream.payload.items()},
+                emit_time=self.clock.time(),
+            )
+            self.queue.put(bucket)
+            self.emitted_buckets += 1
+            self.emitted_records += len(bucket)
+            if self.on_emit is not None:
+                self.on_emit(bucket)
+            return
+        # chaos path: stall/jitter sleeps happen BEFORE the bucket is
+        # stamped (the transport delayed the send, so emit_time moves)
+        action = faults.draw()
+        if action.stall_s > 0.0:
+            self.clock.sleep(action.stall_s)
+        if action.delay_s > 0.0:
+            self.clock.sleep(action.delay_s)
         bucket = Bucket(
             scale_stamp=b,
             t=self.stream.t[sl],
             payload={k: v[sl] for k, v in self.stream.payload.items()},
             emit_time=self.clock.time(),
         )
-        self.queue.put(bucket)
-        self.emitted_buckets += 1
+        self.emitted_buckets += 1          # emissions count ATTEMPTS
         self.emitted_records += len(bucket)
-        if self.on_emit is not None:
-            self.on_emit(bucket)
+        # earlier holds advance on EVERY emission (held ones included),
+        # so a hold of n releases exactly n emissions later
+        released = faults.release_due()
+        if action.hold:                    # bounded reorder: park it
+            faults.hold(bucket, action.hold)
+        elif not action.drop:
+            self.queue.put(bucket)
+            if action.duplicate:
+                self.queue.put(_dup_bucket(bucket))
+            if self.on_emit is not None:
+                self.on_emit(bucket)
+        for rb in released:                # late-delivered held buckets
+            self.queue.put(rb)
+
+    def _flush_faults(self) -> None:
+        """Deliver any still-held (reordered) buckets before close —
+        bounded reorder never silently becomes a drop."""
+        if self.faults is not None:
+            for rb in self.faults.flush():
+                self.queue.put(rb)
 
     # ------------------------------------------------------------ main loop
     def run(self) -> int:
@@ -144,6 +216,7 @@ class Producer:
                     self.clock.sleep((b - prev) * self.tick_s)
                     self._emit(b, sl)          # if len(block) != 0: P(block)
                     prev = b
+                self._flush_faults()
                 self.queue.close()
                 return STATUS_SUCCESS
             return self._run_per_tick()
@@ -160,6 +233,7 @@ class Producer:
                 self.clock.sleep(self.tick_s)  # paper: time.sleep(1)
                 if b in slices:                # if len(block) != 0: P(block)
                     self._emit(b, slices[b])
+            self._flush_faults()
             self.queue.close()
             return STATUS_SUCCESS
         except Exception:
@@ -196,14 +270,23 @@ class Producer:
         first.start()
         while not done.wait(timeout=self.tick_s):  # While TRUE do / sleep(1)
             pass
+        if status[0] == STATUS_SUCCESS:
+            try:
+                self._flush_faults()
+            except Exception:
+                status[0] = STATUS_FAULT
         self.queue.close()
         return status[0]
 
     def stats(self) -> Dict[str, int]:
-        return {
+        out = {
             "emitted_buckets": self.emitted_buckets,
             "emitted_records": self.emitted_records,
+            "aborted_buckets": self.aborted_buckets,
         }
+        if self.faults is not None:
+            out.update(self.faults.stats())
+        return out
 
 
 class MultiQueueProducer:
@@ -237,11 +320,23 @@ class MultiQueueProducer:
     Backpressure is shared: one full queue stalls the loop (and therefore
     every scenario) until its consumer drains — so consumers must run
     concurrently, one per queue.
+
+    ``fault_plan`` attaches a seeded per-scenario fault schedule
+    (:class:`repro.streamsim.faults.FaultPlan`); each scenario draws from
+    its OWN deterministic RNG stream, so its schedule is identical to the
+    one a sequential fault-injected :class:`Producer` replay would apply,
+    regardless of how scenarios interleave. A member queue closed under
+    the walk (the engine's consumer-deadline watchdog shedding a wedged
+    scenario) only kills THAT scenario — its remaining buckets count as
+    ``aborted_buckets`` and the walk continues; producer stalls, however,
+    stall the whole merged walk (one transport, one loop — the
+    broker-stall semantics).
     """
 
     def __init__(self, streams: Mapping, queues: Mapping,
                  clock: Optional[object] = None, tick_s: float = 1.0,
-                 on_emit: Optional[Callable[[object, Bucket], None]] = None):
+                 on_emit: Optional[Callable[[object, Bucket], None]] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         if set(streams) != set(queues):
             raise ValueError("streams and queues must share the same keys")
         self.streams = dict(streams)
@@ -249,8 +344,76 @@ class MultiQueueProducer:
         self.clock = clock if clock is not None else VirtualClock()
         self.tick_s = tick_s
         self.on_emit = on_emit
+        self.fault_plan = fault_plan
         self.emitted_buckets: Dict[object, int] = {k: 0 for k in self.streams}
         self.emitted_records: Dict[object, int] = {k: 0 for k in self.streams}
+        self.aborted_buckets: Dict[object, int] = {k: 0 for k in self.streams}
+
+    def _injectors(self, keys):
+        """Per-scenario injectors (None where the schedule is a no-op —
+        the hot loop keeps its fault-free fast path for those rows)."""
+        if self.fault_plan is None:
+            return [None] * len(keys)
+        return [None if self.fault_plan.is_noop_for(k)
+                else self.fault_plan.injector(k) for k in keys]
+
+    def _emit_one(self, i, b, bucket_args, queues, injectors, n_buckets,
+                  n_records, keys):
+        """Apply one scenario's next bucket (chaos-aware); returns False
+        when the scenario's queue was closed under us (scenario dead)."""
+        t_col, payload_items, clock = bucket_args
+        inj = injectors[i]
+        try:
+            if inj is not None:
+                action = inj.draw()
+                if action.stall_s > 0.0:
+                    clock.sleep(action.stall_s)
+                if action.delay_s > 0.0:
+                    clock.sleep(action.delay_s)
+            sl_t = t_col
+            bucket = Bucket(
+                scale_stamp=b,
+                t=sl_t,
+                payload=dict(payload_items),
+                emit_time=clock.time(),
+            )
+            n_buckets[i] += 1
+            n_records[i] += len(bucket)
+            if inj is not None:
+                # earlier holds advance on EVERY emission (held ones
+                # included) — the sequential _emit discipline
+                released = inj.release_due()
+                if action.hold:
+                    inj.hold(bucket, action.hold)
+                elif not action.drop:
+                    queues[i].put(bucket)
+                    if action.duplicate:
+                        queues[i].put(_dup_bucket(bucket))
+                    if self.on_emit is not None:
+                        self.on_emit(keys[i], bucket)
+                for rb in released:
+                    queues[i].put(rb)
+                return True
+            queues[i].put(bucket)
+            if self.on_emit is not None:
+                self.on_emit(keys[i], bucket)
+            return True
+        except RuntimeError:
+            if not queues[i].closed:
+                raise
+            return False                    # shed scenario, walk continues
+
+    def _close_scenario(self, i, queues, injectors) -> None:
+        """Flush the scenario's held (reordered) buckets, then close."""
+        inj = injectors[i]
+        if inj is not None and not queues[i].closed:
+            try:
+                for rb in inj.flush():
+                    queues[i].put(rb)
+            except RuntimeError:
+                if not queues[i].closed:
+                    raise
+        queues[i].close()
 
     def run(self) -> int:
         """Walk the merged timeline once; returns the paper status code.
@@ -272,10 +435,12 @@ class MultiQueueProducer:
             t_cols = [self.streams[k].t for k in keys]
             payloads = [list(self.streams[k].payload.items()) for k in keys]
             queues = [self.queues[k] for k in keys]
+            injectors = self._injectors(keys)
             on_emit = self.on_emit
             clock, tick_s = self.clock, self.tick_s
             n_buckets = [0] * len(keys)
             n_records = [0] * len(keys)
+            dead = [False] * len(keys)
             slices = []
             events_b, events_s = [], []
             last_bucket = [-1] * len(keys)
@@ -301,22 +466,46 @@ class MultiQueueProducer:
                     if b != prev:
                         clock.sleep((b - prev) * tick_s)
                         prev = b
+                    if dead[i]:
+                        self.aborted_buckets[keys[i]] += 1
+                        continue
                     sl = slices[i][b]
-                    bucket = Bucket(
-                        scale_stamp=b,
-                        t=t_cols[i][sl],
-                        payload={k: v[sl] for k, v in payloads[i]},
-                        emit_time=clock.time(),
-                    )
-                    queues[i].put(bucket)
-                    n_buckets[i] += 1
-                    n_records[i] += len(bucket)
-                    if on_emit is not None:
-                        on_emit(keys[i], bucket)
+                    inj = injectors[i]
+                    if inj is None:
+                        # fault-free fast path (the PR-4 hot loop)
+                        bucket = Bucket(
+                            scale_stamp=b,
+                            t=t_cols[i][sl],
+                            payload={k: v[sl] for k, v in payloads[i]},
+                            emit_time=clock.time(),
+                        )
+                        try:
+                            queues[i].put(bucket)
+                        except RuntimeError:
+                            if not queues[i].closed:
+                                raise
+                            dead[i] = True
+                            self.aborted_buckets[keys[i]] += 1
+                            continue
+                        n_buckets[i] += 1
+                        n_records[i] += len(bucket)
+                        if on_emit is not None:
+                            on_emit(keys[i], bucket)
+                    else:
+                        alive = self._emit_one(
+                            i, b,
+                            (t_cols[i][sl],
+                             [(k, v[sl]) for k, v in payloads[i]],
+                             clock),
+                            queues, injectors, n_buckets, n_records, keys)
+                        if not alive:
+                            dead[i] = True
+                            self.aborted_buckets[keys[i]] += 1
+                            continue
                     if b == last_bucket[i]:
                         # scenario done: close so its consumer can finish
                         # without waiting for the rest of the sweep
-                        queues[i].close()
+                        self._close_scenario(i, queues, injectors)
             for i, key in enumerate(keys):
                 self.emitted_buckets[key] = n_buckets[i]
                 self.emitted_records[key] = n_records[i]
@@ -349,9 +538,11 @@ class MultiQueueProducer:
             t_cols = [self.streams[k].t for k in keys]
             payloads = [list(self.streams[k].payload.items()) for k in keys]
             queues = [self.queues[k] for k in keys]
-            clock, tick_s, on_emit = self.clock, self.tick_s, self.on_emit
+            injectors = self._injectors(keys)
+            clock, tick_s = self.clock, self.tick_s
             n_buckets = [0] * len(keys)
             n_records = [0] * len(keys)
+            dead = [False] * len(keys)
             slices, events = [], []
             heap = []
             for i, key in enumerate(keys):
@@ -370,24 +561,25 @@ class MultiQueueProducer:
                 delay = t0 + (b + 1) * tick_s - clock.time()
                 if delay > 0:
                     clock.sleep(delay)
-                sl = slices[i][b]
-                bucket = Bucket(
-                    scale_stamp=b,
-                    t=t_cols[i][sl],
-                    payload={k: v[sl] for k, v in payloads[i]},
-                    emit_time=clock.time(),
-                )
-                queues[i].put(bucket)
-                n_buckets[i] += 1
-                n_records[i] += len(bucket)
-                if on_emit is not None:
-                    on_emit(keys[i], bucket)
+                if not dead[i]:
+                    sl = slices[i][b]
+                    alive = self._emit_one(
+                        i, b,
+                        (t_cols[i][sl],
+                         [(k, v[sl]) for k, v in payloads[i]],
+                         clock),
+                        queues, injectors, n_buckets, n_records, keys)
+                    if not alive:
+                        dead[i] = True
+                        self.aborted_buckets[keys[i]] += 1
+                else:
+                    self.aborted_buckets[keys[i]] += 1
                 if j + 1 < len(events[i]):
                     heapq.heappush(heap, (events[i][j + 1], i, j + 1))
-                else:
+                elif not dead[i]:
                     # scenario done: close so its consumer can finish
                     # without waiting for the rest of the sweep
-                    queues[i].close()
+                    self._close_scenario(i, queues, injectors)
             for i, key in enumerate(keys):
                 self.emitted_buckets[key] = n_buckets[i]
                 self.emitted_records[key] = n_records[i]
@@ -401,6 +593,11 @@ class MultiQueueProducer:
         """Per-scenario producer stats (matching :meth:`Producer.stats`),
         or the whole mapping when ``key`` is omitted."""
         if key is not None:
-            return {"emitted_buckets": self.emitted_buckets[key],
-                    "emitted_records": self.emitted_records[key]}
+            out = {"emitted_buckets": self.emitted_buckets[key],
+                   "emitted_records": self.emitted_records[key],
+                   "aborted_buckets": self.aborted_buckets[key]}
+            if self.fault_plan is not None and \
+                    not self.fault_plan.is_noop_for(key):
+                out.update(self.fault_plan.injector(key).stats())
+            return out
         return {k: self.stats(k) for k in self.streams}

@@ -1,0 +1,245 @@
+"""Resilience primitives — retries, breakers, deadlines, checkpoints.
+
+The replay layer (:func:`~repro.streamsim.engine.replay_many`) assumed a
+perfect consumer: one crash failed the whole sweep, one wedged consumer
+hung it forever, and a killed sweep restarted from zero. This module
+provides the four primitives the engine wires in:
+
+- :class:`RetryPolicy` — capped exponential backoff with **deterministic**
+  jitter (hash of ``(seed, key, attempt)``, not wall-clock randomness),
+  so a retried sweep is as reproducible as a clean one.
+- :class:`Deadline` — a monotonic time budget; the engine uses it to
+  bound consumer ``join()`` s so a wedged consumer surfaces as a *named
+  scenario failure* instead of an indefinite hang.
+- :class:`CircuitBreaker` — per-scenario consecutive-failure breaker;
+  once open, further retries of that scenario are refused and the
+  scenario degrades to a partial report instead of burning the backoff
+  budget (and the sweep's wall clock) on a persistently-broken consumer.
+- :class:`SweepCheckpoint` — per-scenario completion markers persisted
+  through the :class:`~repro.streamsim.store.StreamStore` (atomic JSON
+  writes), so ``Controller.run_many(checkpoint=True)`` resumes a killed
+  sweep from the last completed scenario with reports equal to an
+  uninterrupted run.
+
+All primitives are pure-host, numpy-free, and deliberately boring: the
+interesting guarantees (schedule determinism, report equality across a
+kill/resume) live in the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "RetryPolicy",
+    "Deadline",
+    "CircuitBreaker",
+    "BreakerOpen",
+    "SweepCheckpoint",
+]
+
+
+def _hash_uniform(seed: int, key: object, attempt: int) -> float:
+    """Deterministic uniform in [0, 1) from (seed, key, attempt)."""
+    digest = hashlib.sha256(
+        f"retry:{seed}|{key!r}|{attempt}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") / 2 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff + deterministic jitter.
+
+    ``delay(attempt, key)`` for 1-based *failed* attempt numbers:
+    ``min(max_delay_s, base_delay_s * multiplier ** (attempt - 1))``
+    scaled by ``1 + jitter * u`` with ``u`` the hash-uniform of
+    ``(seed, key, attempt)`` — two scenarios (or two attempts) never
+    share a jitter draw, yet the whole backoff sequence is reproducible
+    from the policy alone.
+    """
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    multiplier: float = 2.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_delay_s < 0 or self.max_delay_s < 0:
+            raise ValueError("delays must be >= 0")
+        if self.multiplier < 1.0:
+            raise ValueError("multiplier must be >= 1")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+
+    def delay(self, attempt: int, key: object = None) -> float:
+        """Backoff before retry number ``attempt`` (1-based failures)."""
+        if attempt < 1:
+            raise ValueError("attempt is 1-based")
+        base = min(self.max_delay_s,
+                   self.base_delay_s * self.multiplier ** (attempt - 1))
+        return base * (1.0 + self.jitter *
+                       _hash_uniform(self.seed, key, attempt))
+
+    def delays(self, key: object = None) -> List[float]:
+        """The full backoff schedule (one entry per retry)."""
+        return [self.delay(a, key) for a in range(1, self.max_attempts)]
+
+
+class Deadline:
+    """A monotonic time budget (``None`` seconds == no deadline)."""
+
+    def __init__(self, seconds: Optional[float],
+                 clock: Callable[[], float] = time.monotonic):
+        self.seconds = seconds
+        self._clock = clock
+        self._t0 = clock()
+
+    def remaining(self) -> Optional[float]:
+        """Seconds left (clamped to 0), or None for no deadline."""
+        if self.seconds is None:
+            return None
+        return max(0.0, self._t0 + self.seconds - self._clock())
+
+    @property
+    def expired(self) -> bool:
+        rem = self.remaining()
+        return rem is not None and rem <= 0.0
+
+
+class BreakerOpen(RuntimeError):
+    """Raised when work is attempted through an open circuit breaker."""
+
+
+class CircuitBreaker:
+    """Per-scenario consecutive-failure breaker (closed → open →
+    half-open).
+
+    ``failure_threshold`` consecutive failures open the breaker; while
+    open, :meth:`allow` is False. After ``recovery_s`` (monotonic
+    seconds; ``None`` = never) the breaker half-opens: ONE probe attempt
+    is allowed, and its outcome closes (success) or re-opens (failure)
+    the breaker. A success in the closed state resets the failure count.
+    """
+
+    def __init__(self, failure_threshold: int = 3,
+                 recovery_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.recovery_s = recovery_s
+        self._clock = clock
+        self.failures = 0
+        self.state = "closed"          # closed | open | half-open
+        self._opened_at: Optional[float] = None
+
+    def allow(self) -> bool:
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            if (self.recovery_s is not None and
+                    self._clock() - self._opened_at >= self.recovery_s):
+                self.state = "half-open"
+                return True
+            return False
+        return True                    # half-open: the single probe
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self.state = "closed"
+        self._opened_at = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == "half-open" or \
+                self.failures >= self.failure_threshold:
+            self.state = "open"
+            self._opened_at = self._clock()
+
+
+# ------------------------------------------------------------- checkpoints
+class SweepCheckpoint:
+    """Per-scenario sweep completion markers in the stream store.
+
+    Layout (see ``docs/robustness.md`` for the format contract)::
+
+        <store root>/_markers/<sweep_id>/
+            materialized__<dataset>__<max_range>.json
+            report__<dataset>__<max_range>.json
+
+    ``materialized`` markers record that a scenario's simulated stream is
+    persisted (written by :meth:`~repro.streamsim.engine.
+    DeviceSweepResult.materialize`); ``report`` markers carry the full
+    :class:`~repro.streamsim.engine.SimulationReport` JSON (written as
+    each report is assembled). On resume, report markers short-circuit
+    the scenario entirely — its stream is already a store cache hit and
+    its report loads from the marker — so a sweep killed after k
+    scenarios redoes only the remaining ones. Marker writes are atomic
+    (temp file + rename, the store's discipline), so a kill mid-write
+    never yields a half-marker.
+
+    ``sweep_id`` should identify the sweep *configuration* (grid + scale
+    + seed + host slot — :attr:`~repro.streamsim.plan.SweepPlan.sweep_id`
+    provides exactly that), so a restarted run with the same arguments
+    finds its own markers and a different sweep never collides.
+    """
+
+    def __init__(self, store, sweep_id: str):
+        self.store = store
+        self.sweep_id = sweep_id
+
+    # ------------------------------------------------------------- naming
+    @staticmethod
+    def _name(kind: str, scenario: Tuple[str, int]) -> str:
+        d, mr = scenario
+        return f"{kind}__{d}__{mr}"
+
+    # ------------------------------------------------------------ writing
+    def mark_materialized(self, scenarios) -> None:
+        for sc in scenarios:
+            self.store.put_marker(self.sweep_id,
+                                  self._name("materialized", sc),
+                                  {"dataset": sc[0], "max_range": sc[1]})
+
+    def mark_report(self, report) -> None:
+        sc = (report.dataset, report.max_range)
+        self.store.put_marker(self.sweep_id, self._name("report", sc),
+                              report.to_json())
+
+    # ------------------------------------------------------------ reading
+    def done_scenarios(self) -> List[Tuple[str, int]]:
+        """Scenarios with a completed report marker."""
+        out = []
+        for name in self.store.list_markers(self.sweep_id):
+            if name.startswith("report__"):
+                _, d, mr = name.split("__")
+                out.append((d, int(mr)))
+        return out
+
+    def load_reports(self) -> Dict[Tuple[str, int], "object"]:
+        """scenario -> SimulationReport for every report marker."""
+        from repro.streamsim.engine import SimulationReport
+        out = {}
+        for sc in self.done_scenarios():
+            payload = self.store.get_marker(
+                self.sweep_id, self._name("report", sc))
+            out[sc] = SimulationReport.from_json(payload)
+        return out
+
+    def materialized_scenarios(self) -> List[Tuple[str, int]]:
+        out = []
+        for name in self.store.list_markers(self.sweep_id):
+            if name.startswith("materialized__"):
+                _, d, mr = name.split("__")
+                out.append((d, int(mr)))
+        return out
+
+    def clear(self) -> None:
+        self.store.clear_markers(self.sweep_id)

@@ -10,6 +10,15 @@ Here: an on-disk column store. Each stream is a directory holding one
 ``os.replace`` so a crash mid-write never corrupts a stream (atomicity is
 what makes checkpoint-restart of the *pipeline* safe, mirroring the training
 checkpointing discipline in ``repro.training.checkpoint``).
+
+The store also holds **sweep markers** (``put_marker`` / ``get_marker`` /
+``list_markers`` / ``clear_markers``): small JSON completion records under
+``<root>/_markers/<sweep_id>/`` that the resilience layer's
+:class:`~repro.streamsim.resilience.SweepCheckpoint` uses to resume a
+killed sweep from the last completed scenario. Marker writes use the same
+temp-file + ``os.replace`` discipline, so a kill mid-write never yields a
+half-marker; the ``_markers`` tree is invisible to the stream namespace
+(``list()`` only reports directories carrying a stream manifest).
 """
 
 from __future__ import annotations
@@ -116,3 +125,53 @@ class StreamStore:
                 p.unlink()
         if d.exists() and not any(d.iterdir()):
             d.rmdir()
+
+    # --------------------------------------------------------------- markers
+    def _marker_dir(self, sweep_id: str) -> Path:
+        if not sweep_id or "/" in sweep_id or sweep_id.startswith("."):
+            raise ValueError(f"bad sweep id {sweep_id!r}")
+        return self.root / "_markers" / sweep_id
+
+    @staticmethod
+    def _marker_file(d: Path, name: str) -> Path:
+        if not name or "/" in name or name.startswith("."):
+            raise ValueError(f"bad marker name {name!r}")
+        return d / f"{name}.json"
+
+    def put_marker(self, sweep_id: str, name: str, payload: Dict) -> None:
+        """Atomically persist one sweep completion marker (crash-safe:
+        temp file + ``os.replace``, the stream-write discipline)."""
+        d = self._marker_dir(sweep_id)
+        d.mkdir(parents=True, exist_ok=True)
+        target = self._marker_file(d, name)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, target)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get_marker(self, sweep_id: str, name: str) -> Dict:
+        d = self._marker_dir(sweep_id)
+        with open(self._marker_file(d, name)) as f:
+            return json.load(f)
+
+    def has_marker(self, sweep_id: str, name: str) -> bool:
+        return self._marker_file(self._marker_dir(sweep_id), name).exists()
+
+    def list_markers(self, sweep_id: str) -> List[str]:
+        d = self._marker_dir(sweep_id)
+        if not d.exists():
+            return []
+        return sorted(p.stem for p in d.iterdir()
+                      if p.suffix == ".json")
+
+    def clear_markers(self, sweep_id: str) -> None:
+        d = self._marker_dir(sweep_id)
+        if not d.exists():
+            return
+        for p in d.iterdir():
+            p.unlink()
+        d.rmdir()

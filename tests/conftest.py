@@ -5,6 +5,17 @@ import pytest
 # must see 1 device; only launch/dryrun.py forces 512 placeholder devices.
 
 
+def pytest_configure(config):
+    # the chaos suite (test_faults.py) marks hang-prone tests with
+    # @pytest.mark.timeout(...); CI installs pytest-timeout to enforce it
+    # (the chaos-smoke job), but local environments without the plugin
+    # must not warn on the unknown marker
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): hard per-test timeout (enforced when "
+        "pytest-timeout is installed, e.g. the CI chaos-smoke job)")
+
+
 @pytest.fixture(scope="session")
 def small_stream():
     """A preprocessed small-but-real stream (diurnal shape intact)."""
