@@ -1,0 +1,212 @@
+"""PR 7 trajectory rows: chunked double-buffered pipeline + chunk overhead.
+
+Two rows quantify what the unbounded-stream pipeline buys (carry reuse
+and overlap, on multi-day sweeps) and costs (nothing measurable, in the
+degenerate single-chunk case):
+
+- ``chunked_pipeline_7day_8sc`` — a 7-day, 2-dataset × 4-time-range
+  sweep (8 scenarios) streamed in ``chunk_s``-second chunks. NEW:
+  ``Controller.run_many(chunk_s=..., duration_s=7*86400)`` — the
+  double-buffered :class:`~repro.streamsim.engine.ChunkedSweepRunner`
+  pipeline: chunk ``k+1``'s NSA → metrics dispatch is in flight while
+  chunk ``k``'s host leg (gather → ``append_chunk`` → replay feed) runs,
+  and the running statistics live in a device-resident
+  :class:`~repro.kernels.ops.ChunkCarry` updated once per chunk. OLD
+  (the path it replaces): the carry-less sequential chunk loop — block
+  on every chunk's totals before dispatching the next, and, having no
+  carry, rebuild the running statistics FROM SCRATCH over all chunks
+  seen so far (the same ``stream_metrics_chunk`` kernel, replayed from a
+  fresh carry each round — O(K²) metric dispatches vs the pipeline's
+  O(K)), then replay the assembled streams. The win is algorithmic, so
+  the row is gated at >=1.2x by ``check_regression.py``. The row also
+  carries ``host_peak_rss_kb`` (``ru_maxrss``) — the bounded-residency
+  evidence to read alongside the ``feed_hwm_chunks <= 2`` stat asserted
+  in tests/test_chunked.py.
+
+- ``chunk_vs_monolith_1day`` — a single-day grid run with
+  ``chunk_s=86400`` (every scenario is ONE day-sized chunk) vs the
+  monolithic ``run_many`` path. Both paths recompute from a purged
+  store each rep, so this is the full pipeline cost side by side; the
+  gate (<=1.05x) guards the chunk machinery's overhead in the
+  degenerate case where it buys nothing. The row runs at a LARGER
+  scale than the 7-day row: the chunk path's fixed cost (feed handoffs
+  + one extra thread hop per chunk, ~ms) would dominate a toy-sized
+  measurement and gate scheduler noise instead of structure.
+
+Both rows run at reduced scale off-TPU and carry the usual ``@`` suffix
+so trend tooling never mixes incommensurable sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import resource
+import shutil
+import tempfile
+from typing import List
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.streamsim import plan_sweep
+from repro.streamsim.controller import Controller
+from repro.streamsim.engine import (REPORT_TREND_WINDOW_S, replay_many)
+from repro.streamsim.nsa import ChunkedNSA, materialize_sweep_chunk
+from repro.streamsim.plan import DAY_S
+from repro.streamsim.preprocess import Stream
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _tmin(fn, reps=3):
+    """(result, min-of-reps seconds) — min is robust to scheduler noise."""
+    import time
+    out, best = fn(), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        best = min(best, time.perf_counter() - t0)
+        assert r == out, "non-deterministic benchmark result"
+    return out, best
+
+
+def _consumer(queue):
+    return {"records_seen": sum(len(b) for b in queue)}
+
+
+def _purge(store, plan) -> None:
+    """Drop the plan's simulated streams so every rep recomputes them
+    (the store cache would otherwise turn later reps into replay-only)."""
+    for spec in plan.scenarios:
+        store.delete(spec.store_key)
+
+
+def _concat(chunks: List[Stream]) -> Stream:
+    return Stream(
+        name=chunks[0].name,
+        t=np.concatenate([c.t for c in chunks]),
+        payload={k: np.concatenate([c.payload[k] for c in chunks])
+                 for k in chunks[0].payload},
+        scale_stamp=np.concatenate([c.scale_stamp for c in chunks]))
+
+
+def run(csv: List[str]) -> None:
+    if ops.on_tpu():
+        scale, scale1, tag, tag1 = 0.05, 0.05, "", ""
+    else:
+        scale = 0.002 if QUICK else 0.004
+        scale1 = 0.1                  # single-day row: see module docstring
+        tag = f"@scale{scale}"
+        tag1 = f"@scale{scale1}"
+    reps = 2 if QUICK else 4
+    seed = 11
+
+    tmp = tempfile.mkdtemp(prefix="bench_pr7_")
+    try:
+        ctrl = Controller(os.path.join(tmp, "store"))
+
+        # --- 7-day chunked pipeline vs carry-less sequential loop --------
+        datasets7 = ["sogouq", "traffic"]
+        ranges7 = (15, 30, 45, 60)
+        dur, chunk = 7 * DAY_S, 30
+        originals7, _ = ctrl._prepare_all(datasets7, scale, seed, dur)
+        plan7 = plan_sweep(ctrl.store, datasets7, ranges7,
+                           {d: len(originals7[d]) for d in datasets7},
+                           scale=scale, seed=seed, n_devices=1,
+                           host_index=0, n_hosts=1, chunk_s=chunk,
+                           duration_s=dur)
+
+        def _pipelined():
+            _purge(ctrl.store, plan7)
+            reports = ctrl.run_many(datasets7, ranges7, _consumer,
+                                    scale=scale, seed=seed, chunk_s=chunk,
+                                    duration_s=dur)
+            return sum(r.consumer_metrics["records_seen"] for r in reports)
+
+        def _sequential_chunks():
+            # the carry-less loop this PR replaces: same chunk kernels,
+            # but (a) block on each chunk's totals before the next
+            # dispatch (no overlap) and (b) rebuild the running stats
+            # from a FRESH carry over every chunk so far (no cross-chunk
+            # state) — then replay the assembled streams
+            _purge(ctrl.store, plan7)
+            originals, _ = ctrl._prepare_all(datasets7, scale, seed, dur)
+            specs = plan7.scenarios
+            pairs = [(s.dataset, s.span_s) for s in specs]
+            cn = ChunkedNSA(originals, pairs)
+            parts = {s.scenario: [] for s in specs}
+            history = []          # (lo, hi, ss_kept, totals) per chunk
+            for k in range(plan7.n_chunks):
+                lo = k * chunk
+                hi = min(lo + chunk, cn.width)
+                if lo >= hi:
+                    break
+                h = cn.chunk(lo, hi)
+                totals = np.asarray(h.totals, np.int64)   # block: no overlap
+                chunks = materialize_sweep_chunk(originals, pairs, h,
+                                                 totals)
+                for r, s in enumerate(specs):
+                    if k < s.n_chunks:
+                        parts[s.scenario].append(chunks[r])
+                        ctrl.store.append_chunk(s.store_key, k, chunks[r])
+                history.append((lo, hi, h.ss_kept, h.totals))
+                car = ops.chunk_carry_init(len(specs), cn.width,
+                                           window=REPORT_TREND_WINDOW_S)
+                for (lo_i, hi_i, ss_i, tot_i) in history:
+                    car = ops.stream_metrics_chunk(car, ss_i, tot_i,
+                                                   lo_i, hi_i)
+                np.asarray(car.hist)          # running stats READ per chunk
+            for s in specs:
+                ctrl.store.finalize_chunks(
+                    s.store_key, name=originals[s.dataset].name,
+                    n_chunks=s.n_chunks,
+                    extra_meta={"max_range": s.max_range})
+            sims = {s.scenario: _concat(parts[s.scenario]) for s in specs}
+            metrics, _ = replay_many(sims, _consumer, 64)
+            return sum(m["records_seen"] for m in metrics.values())
+
+        got_new, dt_new = _tmin(_pipelined, reps=reps)
+        got_old, dt_old = _tmin(_sequential_chunks, reps=reps)
+        assert got_new == got_old, "pipelined and sequential chunk loops " \
+            f"must deliver identical record totals ({got_new} vs {got_old})"
+        rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        csv.append(
+            f"PR7/chunked_pipeline_7day_8sc{tag},{dt_new*1e6:.0f},"
+            f"scenarios={len(plan7.scenarios)};days=7;chunk_s={chunk};"
+            f"rounds={plan7.n_chunks};"
+            f"sequential_chunk_path_us={dt_old*1e6:.0f};"
+            f"host_peak_rss_kb={rss_kb};"
+            f"speedup={dt_old/max(dt_new, 1e-9):.1f}x")
+
+        # --- single-chunk chunked run vs monolithic run ------------------
+        datasets1 = ["sogouq", "traffic", "userbehavior"]
+        ranges1 = (30, 60)
+        originals1, _ = ctrl._prepare_all(datasets1, scale1, seed)
+        plan1 = plan_sweep(ctrl.store, datasets1, ranges1,
+                           {d: len(originals1[d]) for d in datasets1},
+                           scale=scale1, seed=seed, n_devices=1,
+                           host_index=0, n_hosts=1)
+
+        def _single_chunk():
+            _purge(ctrl.store, plan1)
+            reports = ctrl.run_many(datasets1, ranges1, _consumer,
+                                    scale=scale1, seed=seed, chunk_s=DAY_S)
+            return sum(r.consumer_metrics["records_seen"] for r in reports)
+
+        def _monolithic():
+            _purge(ctrl.store, plan1)
+            reports = ctrl.run_many(datasets1, ranges1, _consumer,
+                                    scale=scale1, seed=seed)
+            return sum(r.consumer_metrics["records_seen"] for r in reports)
+
+        got_c, dt_c = _tmin(_single_chunk, reps=reps)
+        got_m, dt_m = _tmin(_monolithic, reps=reps)
+        assert got_c == got_m, "chunked and monolithic sweeps must " \
+            f"deliver identical record totals ({got_c} vs {got_m})"
+        csv.append(
+            f"PR7/chunk_vs_monolith_1day{tag1},{dt_c*1e6:.0f},"
+            f"scenarios={len(plan1.scenarios)};chunk_s={DAY_S};"
+            f"monolithic_path_us={dt_m*1e6:.0f};"
+            f"overhead={dt_c/max(dt_m, 1e-9):.2f}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

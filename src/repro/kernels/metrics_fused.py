@@ -127,6 +127,108 @@ def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int):
         mom_ref[0, 1] = s2
 
 
+def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
+    """Chunked variant of :func:`_kernel`: the final moment reduction seeds
+    its pairwise+Kahan fold from a per-row carry-in ``[s1, c1, s2, c2]`` and
+    emits the UPDATED 4-state instead of the bare ``[Σq, Σq²]`` pair, so
+    moment accumulation composes across time chunks (histograms partition
+    the bucket axis chunk-by-chunk, so chunk moments simply add; carrying
+    the compensation terms keeps the error O(1) ulp over any number of
+    chunks). With a zero carry the fold is bit-identical to
+    :func:`_kernel`'s."""
+    i = pl.program_id(1)
+    num_tiles = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        mom_ref[...] = jnp.zeros_like(mom_ref)
+
+    ss = ss_ref[0].reshape(TILE)                     # (TILE,) int32
+    valid = ss < buckets                             # padding id >= buckets
+
+    lo = jnp.min(jnp.where(valid, ss, buckets - 1)) // BUCKET_BLOCK
+    hi = jnp.max(jnp.where(valid, ss, 0)) // BUCKET_BLOCK
+    upper = jnp.where(jnp.any(valid), hi + 1, lo)
+
+    def body(blk, carry):
+        base = blk * BUCKET_BLOCK
+        ids = base + jax.lax.broadcasted_iota(
+            jnp.int32, (TILE, BUCKET_BLOCK), 1)
+        partial = jnp.sum((ss[:, None] == ids).astype(jnp.int32), axis=0,
+                          keepdims=True)             # (1, BUCKET_BLOCK) int32
+        cur = hist_ref[:, pl.ds(base, BUCKET_BLOCK)]
+        hist_ref[:, pl.ds(base, BUCKET_BLOCK)] = cur + partial
+        return carry
+
+    jax.lax.fori_loop(lo, upper, body, 0)
+
+    @pl.when(i == num_tiles - 1)
+    def _moments():
+        def kahan(blk, carry):
+            s1, c1, s2, c2 = carry
+            q = hist_ref[:, pl.ds(blk * BUCKET_BLOCK, BUCKET_BLOCK)] \
+                .astype(jnp.float32)                 # padding buckets are 0
+            y1 = jnp.sum(q) - c1
+            t1 = s1 + y1
+            y2 = jnp.sum(q * q) - c2
+            t2 = s2 + y2
+            return t1, (t1 - s1) - y1, t2, (t2 - s2) - y2
+
+        s1, c1, s2, c2 = jax.lax.fori_loop(
+            0, buckets // BUCKET_BLOCK, kahan,
+            (mcar_ref[0, 0], mcar_ref[0, 1], mcar_ref[0, 2], mcar_ref[0, 3]))
+        mom_ref[0, 0] = s1
+        mom_ref[0, 1] = c1
+        mom_ref[0, 2] = s2
+        mom_ref[0, 3] = c2
+
+
+@functools.partial(jax.jit, static_argnames=("buckets", "interpret"))
+def stream_metrics_carry_pallas(ss: jnp.ndarray, mcar: jnp.ndarray,
+                                buckets: int, *, interpret: bool = False):
+    """Fused histogram + carried Kahan moments over ONE time chunk.
+
+    ss      : (S, N) int32 chunk-LOCAL scale stamps (the caller rebases the
+              chunk's absolute bucket range to [0, buckets)), N % TILE == 0;
+              entries >= buckets are padding.
+    mcar    : (S, 4) f32 per-row Kahan moment state ``[s1, c1, s2, c2]``
+              carried from the previous chunk (zeros for the first chunk).
+    buckets : chunk histogram width, % BUCKET_BLOCK == 0.
+
+    Returns ``(hist int32 (S, buckets), mom f32 (S, 4))`` — the chunk's
+    histogram plus the UPDATED Kahan state with this chunk's buckets folded
+    in; ``mom[:, 0]``/``mom[:, 2]`` are the running ``Σq``/``Σq²``. With a
+    zero carry, ``(hist, mom[:, ::2])`` is bit-identical to
+    :func:`stream_metrics_pallas` on the same input.
+    """
+    S, n = ss.shape
+    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert buckets % BUCKET_BLOCK == 0, \
+        f"pad buckets to a multiple of {BUCKET_BLOCK}"
+    rows = n // LANE
+    ss3 = ss.reshape(S, rows, LANE)
+    grid = (S, rows // SUBLANE)
+    hist, mom = pl.pallas_call(
+        functools.partial(_kernel_carry, buckets=buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, 4), lambda s, i: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, buckets), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, 4), lambda s, i: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, buckets), jnp.int32),
+            jax.ShapeDtypeStruct((S, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ss3, mcar.astype(jnp.float32))
+    return hist, mom
+
+
 @functools.partial(jax.jit, static_argnames=("buckets", "interpret"))
 def stream_metrics_pallas(ss: jnp.ndarray, buckets: int, *,
                           interpret: bool = False):

@@ -8,6 +8,7 @@ sweep shapes/dtypes asserting allclose against the oracles.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -19,10 +20,12 @@ from repro.kernels import ref
 from repro.kernels.compact import compact_positions_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.metrics_fused import (BUCKET_BLOCK, TILE,
+                                         stream_metrics_carry_pallas,
                                          stream_metrics_pallas)
 from repro.kernels.stream_sample import stream_sample_pallas
 from repro.kernels.trend_scan import TILE as TREND_TILE
 from repro.kernels.trend_scan import (PAIR_TILE, pair_stats_pallas,
+                                      trend_scan_carry_pallas,
                                       trend_scan_pallas)
 
 
@@ -263,13 +266,27 @@ def compact_mask_batched(mask: jnp.ndarray) -> Tuple[jnp.ndarray,
     shows up in the output). Per row this matches :func:`compact_mask` on
     that row exactly: same kept indices, same sentinel convention.
     """
+    idx, totals = compact_mask_batched_device(mask)
+    return idx, np.asarray(totals, np.int64).reshape(-1)
+
+
+def compact_mask_batched_device(mask: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                            jnp.ndarray]:
+    """:func:`compact_mask_batched` with the totals left ON DEVICE.
+
+    Same scan + scatter chain and the same ``idx`` contract, but the
+    per-row totals come back as an int32 device array instead of a host
+    int64 one — reading them would force a device sync, which the chunked
+    pipeline must NOT do at dispatch time (the host reads chunk ``k``'s
+    totals only after chunk ``k+1``'s dispatch is in flight).
+    """
     from repro.kernels.compact import compact_positions_batched_pallas
     mask = jnp.asarray(mask)
     if mask.ndim != 2:
         raise ValueError(f"mask must be (R, N), got shape {mask.shape}")
     R, n = mask.shape
     if n == 0 or R == 0:
-        return jnp.zeros((R, n), jnp.int32), np.zeros(R, np.int64)
+        return jnp.zeros((R, n), jnp.int32), jnp.zeros(R, jnp.int32)
     pad = (-n) % TILE
     mi = mask.astype(jnp.int32)
     if pad:
@@ -281,7 +298,7 @@ def compact_mask_batched(mask: jnp.ndarray) -> Tuple[jnp.ndarray,
     rows = jnp.arange(R, dtype=jnp.int32)[:, None]
     cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (R, n))
     idx = jnp.full((R, n), n, jnp.int32).at[rows, tgt].set(cols, mode="drop")
-    return idx, np.asarray(totals, np.int64).reshape(-1)
+    return idx, totals.reshape(-1)
 
 
 # -------------------------------------------------------- metrics engine
@@ -880,6 +897,228 @@ def trend_corr_pairwise(qa: jnp.ndarray, lengths_a, qb: jnp.ndarray,
     return np.asarray(r, np.float64)
 
 
+# ------------------------------------------------------------- chunk carry
+@dataclasses.dataclass
+class ChunkCarry:
+    """Device-resident cross-chunk carry state for the chunked sweep.
+
+    The chunked pipeline splits each scenario's simulated timeline into
+    fixed-size scale-stamp chunks (chunk ``k`` owns the absolute bucket
+    range ``[k·chunk_s, (k+1)·chunk_s)``); because chunks partition the
+    BUCKET axis, per-chunk outputs compose exactly:
+
+    ``hist``       (S, width) int32 — the running absolute-bucket histogram;
+                   each chunk's slice lands at its own column range, so the
+                   finalized histogram is bit-identical to the monolithic
+                   kernel's.
+    ``mom``        (S, 4) f32 — the pairwise+Kahan moment state
+                   ``[s1, c1, s2, c2]`` (``Σq`` / ``Σq²`` plus their
+                   compensation terms), folded in-kernel chunk by chunk;
+                   carrying the compensations keeps the error O(1) ulp
+                   regardless of chunk count (the documented ~1e-5).
+    ``psum_tail``  (S,) int32 — the inclusive prefix-sum total through the
+                   last folded bucket (the trend scan kernel's carry-in).
+    ``trend_tail`` (S, w-1) int32 — the last ``w-1`` bucket counts, i.e.
+                   exactly the history a ``w``-second sliding-mean window
+                   still needs once the next chunk arrives.
+
+    All four live on device; only ``window``/``next_lo`` are host
+    bookkeeping. Nothing here is ever transferred between chunks.
+    """
+
+    hist: jnp.ndarray
+    mom: jnp.ndarray
+    psum_tail: jnp.ndarray
+    trend_tail: jnp.ndarray
+    window: int
+    next_lo: int = 0
+
+
+def chunk_carry_init(n_rows: int, width: int, window: int = 1) -> ChunkCarry:
+    """Fresh all-zero carry for ``n_rows`` scenario rows and a ``width``-
+    bucket sweep axis. Per-scenario isolation is by construction: every
+    scenario row has its own carry lane, and a new sweep (or a new scenario
+    batch) starts from a new ``chunk_carry_init`` — never from a reused
+    carry."""
+    if n_rows < 1 or width < 1:
+        raise ValueError("need n_rows >= 1 and width >= 1")
+    w = max(int(window), 1)
+    return ChunkCarry(
+        hist=jnp.zeros((n_rows, width), jnp.int32),
+        mom=jnp.zeros((n_rows, 4), jnp.float32),
+        psum_tail=jnp.zeros((n_rows,), jnp.int32),
+        trend_tail=jnp.zeros((n_rows, w - 1), jnp.int32),
+        window=w)
+
+
+def stream_metrics_chunk(carry: ChunkCarry, ss: jnp.ndarray, valid_counts,
+                         lo: int, hi: int) -> ChunkCarry:
+    """Fold one chunk's kept scale stamps into the carry — all on device.
+
+    Parameters
+    ----------
+    carry : ChunkCarry
+        State after the previous chunk (``chunk_carry_init`` for the
+        first).
+    ss : jnp.ndarray, int32, shape (S, N)
+        ABSOLUTE scale stamps of this chunk's kept records, device-
+        resident; row ``s``'s entries past ``valid_counts[s]`` may hold
+        garbage (clipped gather output). Valid stamps must lie in
+        ``[lo, hi)`` — guaranteed by NSA upstream, not re-checked here (a
+        host check would defeat the device residency).
+    valid_counts : array-like int, shape (S,)
+        Per-row kept-record count for this chunk; a DEVICE array keeps the
+        dispatch sync-free.
+    lo, hi : int
+        The chunk's absolute bucket range (``hi - lo`` buckets, ragged
+        last chunk allowed); consecutive calls must tile the bucket axis
+        in order.
+
+    Returns a new :class:`ChunkCarry`: the chunk histogram (from the
+    carried-Kahan metrics kernel) lands at columns ``[lo, hi)`` of
+    ``hist``; ``mom`` is the kernel's updated Kahan state; ``psum_tail`` /
+    ``trend_tail`` advance so the trend scan can continue seamlessly.
+    """
+    ss = jnp.asarray(ss)
+    if ss.ndim != 2:
+        raise ValueError(f"ss must be (S, N), got shape {ss.shape}")
+    cw = int(hi) - int(lo)
+    if cw <= 0:
+        raise ValueError(f"empty chunk range [{lo}, {hi})")
+    if lo != carry.next_lo:
+        raise ValueError(
+            f"chunk [{lo}, {hi}) out of order: carry expects lo == "
+            f"{carry.next_lo} (chunks must tile the bucket axis in order)")
+    if hi > carry.hist.shape[1]:
+        raise ValueError(f"chunk [{lo}, {hi}) exceeds the carry's "
+                         f"{carry.hist.shape[1]}-bucket axis")
+    S, N = ss.shape
+    _check_metrics_domain(N)
+    buckets = int(-(-cw // BUCKET_BLOCK) * BUCKET_BLOCK)
+    nvalid = jnp.asarray(valid_counts, jnp.int32).reshape(S, 1)
+    local = ss.astype(jnp.int32) - jnp.int32(lo)     # chunk-local bucket ids
+    ssb = jnp.where(jnp.arange(N, dtype=jnp.int32)[None, :] < nvalid,
+                    local, buckets)                  # padding id >= buckets
+    pad = (-N) % TILE
+    if pad or N == 0:
+        ssb = jnp.concatenate(
+            [ssb, jnp.full((S, pad or TILE), buckets, jnp.int32)], axis=1)
+    hist_c, mom = stream_metrics_carry_pallas(ssb, carry.mom, buckets,
+                                              interpret=not _on_tpu())
+    chunk_q = hist_c[:, :cw]
+    hist = jax.lax.dynamic_update_slice(carry.hist, chunk_q, (0, lo))
+    psum_tail = carry.psum_tail + jnp.sum(chunk_q, axis=1, dtype=jnp.int32)
+    w = carry.window
+    if w > 1:
+        ext = jnp.concatenate([carry.trend_tail, chunk_q], axis=1)
+        trend_tail = ext[:, -(w - 1):]
+    else:
+        trend_tail = carry.trend_tail
+    return dataclasses.replace(carry, hist=hist, mom=mom,
+                               psum_tail=psum_tail, trend_tail=trend_tail,
+                               next_lo=int(hi))
+
+
+def chunk_carry_finalize(carry: ChunkCarry) -> Tuple[jnp.ndarray,
+                                                     jnp.ndarray]:
+    """(hist int32 (S, width), moments f32 (S, 2)) — the monolithic
+    engine's output shapes, recovered from a fully-folded carry: counts
+    bit-identical to one whole-timeline dispatch, moments within the
+    documented ~1e-5 (the Kahan fold sees the same buckets in the same
+    block order, just split across launches)."""
+    return carry.hist, carry.mom[:, ::2]
+
+
+def trend_scan_chunk(q_chunk: jnp.ndarray, window: int, *, tail=None,
+                     psum_carry=None, lo: int = 0, is_last: bool = False):
+    """Streaming sliding-mean trend: emit the positions a chunk completes.
+
+    The chunked counterpart of :func:`trend_scan_batched_device` for one
+    time chunk of the count series. A centered ``w``-window at position
+    ``p`` reaches ``half = (w-1)//2`` buckets PAST ``p``, so the emission
+    frontier lags the fold frontier by ``half`` positions: after folding
+    buckets ``[lo, lo+c)`` the positions ``[max(lo-half, 0), lo+c-half)``
+    have their full window available (``is_last=True`` flushes the final
+    ``half`` clamped positions). Window sums are int32-exact (the carry
+    form of the scan kernel seeds its SMEM carry from ``psum_carry``), so
+    concatenating the emitted segments over all chunks is BIT-identical to
+    the monolithic trend — provided the total series length is >=
+    ``window`` (the monolithic path clamps ``w`` to short series; a
+    streaming consumer cannot know the final length mid-stream, so this op
+    requires the un-clamped regime).
+
+    Parameters
+    ----------
+    q_chunk : (S, c) int32 device — this chunk's bucket counts (uniform
+        row length; the sweep's aligned chunk grid guarantees this).
+    window : int — sliding-mean window ``w`` (>= 1).
+    tail : (S, w-1) int32 device — the previous carry's ``trend_tail``
+        (``None`` = zeros, first chunk).
+    psum_carry : (S,) int32 device — the previous carry's ``psum_tail``
+        (``None`` = zeros).
+    lo : int — the chunk's first absolute bucket id.
+    is_last : bool — flush the final ``half`` positions.
+
+    Returns ``(seg f32 (S, m), start, new_tail, new_total)`` where ``seg``
+    covers global trend positions ``[start, start + m)`` (``m`` may be 0
+    for a tiny first chunk), and ``new_tail``/``new_total`` feed the next
+    call.
+    """
+    w = int(window)
+    if w < 1:
+        raise ValueError("window must be >= 1")
+    q_chunk = jnp.asarray(q_chunk, jnp.int32)
+    if q_chunk.ndim != 2:
+        raise ValueError(f"q_chunk must be (S, c), got {q_chunk.shape}")
+    S, c = q_chunk.shape
+    if tail is None:
+        tail = jnp.zeros((S, w - 1), jnp.int32)
+    tail = jnp.asarray(tail, jnp.int32)
+    if tail.shape != (S, w - 1):
+        raise ValueError(f"tail must be (S, {w - 1}), got {tail.shape}")
+    if psum_carry is None:
+        psum_carry = jnp.zeros((S,), jnp.int32)
+    psum_carry = jnp.asarray(psum_carry, jnp.int32).reshape(S)
+
+    # ext covers global buckets [lo - (w-1), lo + c): every window any
+    # emittable position needs. Leading zeros (first chunks) reproduce the
+    # monolithic lo-clamp exactly — zero counts add nothing to any window.
+    ext = jnp.concatenate([tail, q_chunk], axis=1)        # (S, w-1+c)
+    base = psum_carry - jnp.sum(tail, axis=1, dtype=jnp.int32)
+    n_ext = ext.shape[1]
+    pad = (-n_ext) % TREND_TILE
+    if pad or n_ext == 0:
+        ext_p = jnp.concatenate(
+            [ext, jnp.zeros((S, pad or TREND_TILE), jnp.int32)], axis=1)
+    else:
+        ext_p = ext
+    cinc, _ = trend_scan_carry_pallas(ext_p, base, interpret=not _on_tpu())
+    cinc = cinc[:, :n_ext]                  # inclusive global prefix sums
+
+    half = (w - 1) // 2
+    hi_abs = lo + c
+    e0 = max(lo - half, 0)
+    e1 = hi_abs if is_last else max(hi_abs - half, e0)
+    new_tail = ext[:, -(w - 1):] if w > 1 else tail
+    new_total = psum_carry + jnp.sum(q_chunk, axis=1, dtype=jnp.int32)
+    m = e1 - e0
+    if m <= 0:
+        return jnp.zeros((S, 0), jnp.float32), e0, new_tail, new_total
+
+    p = jnp.arange(e0, e1, dtype=jnp.int32)[None, :]      # global positions
+    # local (ext) indices of the window's exclusive-prefix bounds
+    jhi = jnp.minimum(p + half + 1, hi_abs) - lo + (w - 1)
+    jlo = p + half - lo                                   # >= 0 by e0 choice
+
+    def cex(j):                             # exclusive prefix at local j
+        jb = jnp.broadcast_to(j, (S, m))
+        g = jnp.take_along_axis(cinc, jnp.maximum(jb - 1, 0), axis=1)
+        return jnp.where(jb > 0, g, base[:, None])
+
+    win = (cex(jhi) - cex(jlo)).astype(jnp.float32)
+    return win / jnp.float32(w), e0, new_tail, new_total
+
+
 # ------------------------------------------------------------ flash decode
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  lengths: jnp.ndarray, *, block_s: int = 512) -> jnp.ndarray:
@@ -899,8 +1138,10 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 __all__ = [
-    "KeepRuleOverflow", "PallasDomainError", "bucket_hist", "compact_mask",
-    "compact_mask_batched", "flash_decode", "on_tpu", "stream_metrics",
+    "ChunkCarry", "KeepRuleOverflow", "PallasDomainError", "bucket_hist",
+    "chunk_carry_finalize", "chunk_carry_init", "compact_mask",
+    "compact_mask_batched", "compact_mask_batched_device", "flash_decode",
+    "on_tpu", "stream_metrics", "stream_metrics_chunk", "trend_scan_chunk",
     "stream_metrics_batched", "stream_metrics_batched_device",
     "stream_sample", "stream_sample_batched", "stream_sample_ref",
     "trend_corr_pairwise", "trend_correlation_batched",

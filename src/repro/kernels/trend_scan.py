@@ -109,6 +109,71 @@ def trend_scan_pallas(q: jnp.ndarray, *, interpret: bool = False):
     return psum.reshape(S, n)
 
 
+def _scan_kernel_carry(init_ref, q_ref, psum_ref, tail_ref, carry_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _seed():                                     # carry-IN, not a reset
+        carry_ref[0] = init_ref[0, 0]
+
+    q = q_ref[0].astype(jnp.int32)                   # (SUBLANE, LANE)
+    row_incl = jnp.cumsum(q, axis=1)
+    row_tot = row_incl[:, -1:]
+    row_off = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+
+    carry = carry_ref[0]
+    psum_ref[0] = carry + row_off + row_incl
+    carry_ref[0] = carry + jnp.sum(q)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _tail():
+        tail_ref[0, 0] = carry_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trend_scan_carry_pallas(q: jnp.ndarray, init: jnp.ndarray, *,
+                            interpret: bool = False):
+    """Chunked form of :func:`trend_scan_pallas`: the SMEM running carry is
+    *seeded* from a per-row carry-in instead of reset to zero, so prefix
+    sums over consecutive time chunks compose exactly.
+
+    q    : (S, N) int32 — one time chunk per row, N % TILE == 0 (pad time
+           tails with 0).
+    init : (S,) int32 — each row's inclusive prefix total through the last
+           bucket of the PREVIOUS chunk (zeros for the first chunk, which
+           makes this bit-identical to :func:`trend_scan_pallas`).
+
+    Returns ``(psum int32 (S, N), tail int32 (S,))`` where
+    ``psum[s, i] = init[s] + Σ_{j <= i} q[s, j]`` and ``tail[s]`` is the
+    row's new running total — the ``init`` to feed the next chunk. Exact
+    while the cumulative total stays below 2³¹ (ops-wrapper guarded).
+    """
+    S, n = q.shape
+    assert n % TILE == 0, f"pad time steps to a multiple of {TILE}"
+    rows = n // LANE
+    q3 = q.reshape(S, rows, LANE)
+    grid = (S, rows // SUBLANE)
+    psum, tail = pl.pallas_call(
+        _scan_kernel_carry,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, 1), lambda s, i: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(init.reshape(S, 1).astype(jnp.int32), q3)
+    return psum.reshape(S, n), tail.reshape(S)
+
+
 def _pair_kernel(x_ref, sums_ref, gram_ref):
     i = pl.program_id(0)
 

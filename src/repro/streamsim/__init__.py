@@ -57,6 +57,7 @@ from repro.streamsim.resilience import (  # noqa: F401
     SweepCheckpoint,
 )
 from repro.streamsim.producer import (  # noqa: F401
+    ChunkFeed,
     MultiQueueProducer,
     Producer,
     RealClock,
@@ -69,10 +70,12 @@ from repro.streamsim.plan import (  # noqa: F401
     plan_sweep,
 )
 from repro.streamsim.engine import (  # noqa: F401
+    ChunkedSweepRunner,
     DeviceSweepResult,
     FidelityReport,
     SimulationReport,
     execute_sweep,
     run_sweep,
+    run_sweep_chunked,
 )
 from repro.streamsim.controller import Controller  # noqa: F401

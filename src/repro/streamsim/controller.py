@@ -34,7 +34,7 @@ from repro.streamsim.datasets import make_stream
 from repro.streamsim.engine import FidelityReport, SimulationReport  # noqa: F401
 from repro.streamsim.faults import FaultPlan
 from repro.streamsim.nsa import _resolve_backend, nsa
-from repro.streamsim.plan import plan_sweep
+from repro.streamsim.plan import DAY_S, plan_sweep
 from repro.streamsim.preprocess import Stream, preprocess
 from repro.streamsim.queue import StreamQueue
 from repro.streamsim.resilience import RetryPolicy, SweepCheckpoint
@@ -85,14 +85,54 @@ class Controller:
         return sim
 
     def _prepare_all(self, datasets: Sequence[str], scale: float,
-                     seed: int) -> tuple:
-        """POSD every dataset, timing each (matching ``run``'s reports)."""
+                     seed: int, duration_s: int = 0) -> tuple:
+        """POSD every dataset, timing each (matching ``run``'s reports).
+
+        ``duration_s > 0`` prepares the MULTI-DAY original instead: one
+        preprocessed day per 86 400 s of duration (day ``d`` generated
+        with ``seed + d``, so days carry distinct traffic), each day
+        rebased onto ``[d*86400, (d+1)*86400)`` so the diurnal cycle
+        stays aligned across days, concatenated and trimmed to
+        ``duration_s``. Cached under ``<dataset>__orig__d<duration>``.
+        """
         originals, t_pre = {}, {}
         for d in datasets:
             t0 = time.perf_counter()
-            originals[d] = self.prepare(d, scale=scale, seed=seed)
+            if duration_s > 0:
+                originals[d] = self._prepare_multiday(d, scale, seed,
+                                                      duration_s)
+            else:
+                originals[d] = self.prepare(d, scale=scale, seed=seed)
             t_pre[d] = time.perf_counter() - t0
         return originals, t_pre
+
+    def _prepare_multiday(self, dataset: str, scale: float, seed: int,
+                          duration_s: int) -> Stream:
+        key = f"{dataset}__orig__d{duration_s}"
+        if self.store.exists(key):
+            return self.store.get(key)
+        n_days = -(-int(duration_s) // DAY_S)
+        ts, payloads = [], []
+        for day in range(n_days):
+            raw = make_stream(dataset, scale=scale, seed=seed + day)
+            st = preprocess(raw)
+            # rebase the day onto its slot; clip a (pathological) day
+            # running past 86 400 s to the slot boundary so the
+            # concatenation stays chronological
+            t_day = np.minimum(st.t - st.t[0], float(DAY_S))
+            ts.append(t_day + day * float(DAY_S))
+            payloads.append(st.payload)
+        t = np.concatenate(ts)
+        cols = payloads[0].keys()
+        payload = {c: np.concatenate([p[c] for p in payloads])
+                   for c in cols}
+        keep = t < float(duration_s)     # trim the partial last day
+        stream = Stream(name=dataset, t=t[keep],
+                        payload={c: v[keep] for c, v in payload.items()},
+                        scale_stamp=None)
+        self.store.put(key, stream, {"scale": scale, "seed": seed,
+                                     "duration_s": int(duration_s)})
+        return stream
 
     def run(self, dataset: str, max_range: int,
             consumer: Callable[[StreamQueue], Dict], *,
@@ -167,7 +207,9 @@ class Controller:
                  on_failure: str = "raise",
                  max_bytes: Optional[int] = None,
                  retention_policy: str = "block",
-                 checkpoint: bool = False) -> List[SimulationReport]:
+                 checkpoint: bool = False,
+                 chunk_s: int = 0,
+                 duration_s: int = 0) -> List[SimulationReport]:
         """The Tables 1-3 scenario sweep (datasets × time ranges), planned
         and executed by the sweep engine.
 
@@ -236,6 +278,27 @@ class Controller:
             whole sweep completes. (Resume re-plans only the remaining
             scenarios, so its fidelity matrices cover the resumed subset;
             single-host sweeps are the intended scope.)
+        chunk_s : int, default 0
+            ``> 0`` routes the sweep through the chunked double-buffered
+            pipeline (:class:`repro.streamsim.engine.ChunkedSweepRunner`
+            + :func:`repro.streamsim.engine.run_sweep_chunked`): each
+            scenario's timeline is computed, persisted and replayed in
+            ``chunk_s``-second chunks with cross-chunk carry state
+            device-resident, so host residency stays bounded (at most 2
+            chunks per scenario buffered — the ``feed_hwm_chunks`` stat
+            in each report's ``consumer_metrics`` proves it) while the
+            reports compose to the monolithic answer. ``chunk_s`` does
+            NOT enter the store cache key — chunked and monolithic runs
+            share simulated streams. The chunked path does not support
+            ``retry_policy``/``consumer_deadline_s`` (a consumed chunk
+            cannot be rewound); ``on_failure="degrade"`` still applies.
+        duration_s : int, default 0
+            ``> 0`` simulates a MULTI-DAY source: one preprocessed day
+            per 86 400 s (see :meth:`_prepare_all`), every scenario's
+            effective simulated range growing to ``max_range`` per day
+            (``ScenarioSpec.span_s``), preserving the per-day
+            compression ratio. Requires ``chunk_s > 0`` (multi-day runs
+            exist to be streamed, not held whole).
 
         Returns
         -------
@@ -256,7 +319,18 @@ class Controller:
         on the pallas backend), saved as JSON under ``fidelity_dir``, and
         exposed on :attr:`last_fidelity`.
         """
-        originals, t_pre = self._prepare_all(datasets, scale, seed)
+        if duration_s and not chunk_s:
+            raise ValueError(
+                "duration_s requires chunk_s > 0 — multi-day sweeps run "
+                "through the chunked pipeline")
+        if chunk_s and (retry_policy is not None or
+                        consumer_deadline_s is not None):
+            raise ValueError(
+                "retry_policy/consumer_deadline_s are monolithic-replay "
+                "features; the chunked pipeline cannot rewind a "
+                "scenario's consumed chunks")
+        originals, t_pre = self._prepare_all(datasets, scale, seed,
+                                             duration_s)
         if _resolve_backend(backend) == "numpy":
             # host mode ignores the partition; don't let the topology
             # defaults force a jax runtime initialization on the pure
@@ -267,7 +341,8 @@ class Controller:
         row_counts = {d: len(originals[d]) for d in datasets}
         plan = plan_sweep(self.store, datasets, max_ranges, row_counts,
                           scale=scale, seed=seed, n_devices=n_devices,
-                          host_index=host_index, n_hosts=n_hosts)
+                          host_index=host_index, n_hosts=n_hosts,
+                          chunk_s=chunk_s, duration_s=duration_s)
         ckpt: Optional[SweepCheckpoint] = None
         prior: Dict = {}
         grid = [s.scenario for s in plan.scenarios]
@@ -288,19 +363,32 @@ class Controller:
                     self.store, datasets, max_ranges, row_counts,
                     scale=scale, seed=seed, pairs=remaining,
                     n_devices=n_devices, host_index=host_index,
-                    n_hosts=n_hosts)
+                    n_hosts=n_hosts, chunk_s=chunk_s,
+                    duration_s=duration_s)
         new_reports: List[SimulationReport] = []
         if plan is not None:
-            result = engine.execute_sweep(plan, originals, self.store,
-                                          backend=backend, checkpoint=ckpt)
-            new_reports, fidelity = engine.run_sweep(
-                result, consumer, queue_size=queue_size,
-                fidelity_window_s=fidelity_window_s, t_pre=t_pre,
-                fault_plan=fault_plan, retry_policy=retry_policy,
-                breaker_threshold=breaker_threshold,
-                consumer_deadline_s=consumer_deadline_s,
-                on_failure=on_failure, max_bytes=max_bytes,
-                retention_policy=retention_policy, checkpoint=ckpt)
+            if chunk_s:
+                runner = engine.ChunkedSweepRunner(
+                    plan, originals, self.store, backend=backend,
+                    checkpoint=ckpt)
+                new_reports, fidelity = engine.run_sweep_chunked(
+                    runner, consumer, queue_size=queue_size,
+                    fidelity_window_s=fidelity_window_s, t_pre=t_pre,
+                    fault_plan=fault_plan, on_failure=on_failure,
+                    max_bytes=max_bytes,
+                    retention_policy=retention_policy, checkpoint=ckpt)
+            else:
+                result = engine.execute_sweep(plan, originals, self.store,
+                                              backend=backend,
+                                              checkpoint=ckpt)
+                new_reports, fidelity = engine.run_sweep(
+                    result, consumer, queue_size=queue_size,
+                    fidelity_window_s=fidelity_window_s, t_pre=t_pre,
+                    fault_plan=fault_plan, retry_policy=retry_policy,
+                    breaker_threshold=breaker_threshold,
+                    consumer_deadline_s=consumer_deadline_s,
+                    on_failure=on_failure, max_bytes=max_bytes,
+                    retention_policy=retention_policy, checkpoint=ckpt)
             self.last_fidelity = fidelity
             for fr in fidelity:
                 self.save_fidelity(fr)

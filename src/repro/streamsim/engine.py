@@ -55,12 +55,14 @@ from repro.streamsim.metrics import (StreamMetrics, Volatility,
                                      metrics_batched,
                                      trend_correlation_from_counts,
                                      trend_correlation_matrix)
-from repro.streamsim.nsa import (_resolve_backend, compression_factor,
-                                 materialize_sweep, nsa, nsa_sweep_device)
+from repro.streamsim.nsa import (ChunkedNSA, _resolve_backend,
+                                 compression_factor, materialize_sweep,
+                                 materialize_sweep_chunk, nsa,
+                                 nsa_sweep_device)
 from repro.streamsim.plan import Shard, SweepPlan
 from repro.streamsim.preprocess import Stream
-from repro.streamsim.producer import (MultiQueueProducer, Producer,
-                                      VirtualClock)
+from repro.streamsim.producer import (ChunkFeed, MultiQueueProducer,
+                                      Producer, VirtualClock)
 from repro.streamsim.queue import QueueGroup, StreamQueue
 from repro.streamsim.resilience import (CircuitBreaker, Deadline,
                                         RetryPolicy, SweepCheckpoint)
@@ -194,6 +196,17 @@ class DeviceSweepResult:
         #: optional SweepCheckpoint; materialize() then persists
         #: per-scenario completion markers for crash-resume
         self.checkpoint: Optional[SweepCheckpoint] = None
+        #: per-scenario EFFECTIVE simulated range (``ScenarioSpec.span_s``
+        #: — equals ``max_range`` unless the plan carries a multi-day
+        #: ``duration_s``); the statistics paths size count rows by it
+        self.spans: Dict[Tuple[str, int], int] = {
+            s.scenario: s.span_s for s in plan.scenarios}
+        self._store_keys: Dict[Tuple[str, int], str] = {
+            s.scenario: s.store_key for s in plan.scenarios}
+        #: chunked runs set this: scenario -> kept-row count, so
+        #: ``build_report`` never needs the (unbounded-memory)
+        #: ``materialize()`` host pass just to count rows
+        self.sim_row_counts: Optional[Dict[Tuple[str, int], int]] = None
 
     @property
     def om(self) -> Dict[str, StreamMetrics]:
@@ -274,7 +287,8 @@ class DeviceSweepResult:
             kind, sr, r = src[sc]
             if kind == "shard":
                 vol = _volatility_from_moments(
-                    float(sr.mom[r, 0]), float(sr.mom[r, 1]), sc[1])
+                    float(sr.mom[r, 0]), float(sr.mom[r, 1]),
+                    self.spans.get(sc, sc[1]))
             else:
                 vol = self._cached_sm[sc].volatility
             stats[sc] = {"volatility": vol}
@@ -325,7 +339,8 @@ class DeviceSweepResult:
         qmat = jnp.concatenate(groups, axis=0)
         perm = np.argsort(np.array(order), kind="stable")
         qmat = jnp.take(qmat, jnp.asarray(perm), axis=0)
-        lengths = np.array([sc[1] for sc in scenarios], np.int64)
+        lengths = np.array([self.spans.get(sc, sc[1]) for sc in scenarios],
+                           np.int64)
         totals = np.array(
             [src[sc][1].totals[src[sc][2]] if src[sc][0] == "shard"
              else int(self._cached_sm[sc].counts.sum())
@@ -360,7 +375,7 @@ class DeviceSweepResult:
         try:
             om_mat, om_trs, om_totals, didx = self._orig_count_matrix()
             rows = np.array([didx[sc[0]] for sc in scenarios])
-            width = max(int(sc[1]) for sc in scenarios)
+            width = max(int(self.spans.get(sc, sc[1])) for sc in scenarios)
             qb, lb, sim_totals = self._sim_count_rows(scenarios, src, width)
             totals = np.concatenate([om_totals, sim_totals])
             # unique originals + a_index: each original's full-length
@@ -379,7 +394,8 @@ class DeviceSweepResult:
         if kind == "host":
             self._ensure_host_group()
             return self._cached_sm[sc].counts
-        return np.asarray(sr.hist)[r, :sc[1]].astype(np.int64)
+        return np.asarray(sr.hist)[r, :self.spans.get(sc, sc[1])] \
+            .astype(np.int64)
 
     # ------------------------------------------------------------- fidelity
     def fidelity(self, window_s: int = 60) -> List[FidelityReport]:
@@ -419,8 +435,10 @@ class DeviceSweepResult:
                         self._orig_count_matrix()
                     sel = np.array([didx[d] for d in row_ds])
                     om_sel = jnp.take(om_mat, jnp.asarray(sel), axis=0)
+                    w_sc = max(int(self.spans.get(sc2, mr))
+                               for sc2 in scs)
                     qb, lb, sim_totals = self._sim_count_rows(
-                        scs, src, max(int(om_sel.shape[1]), mr))
+                        scs, src, max(int(om_sel.shape[1]), w_sc))
                     pad = qb.shape[1] - om_sel.shape[1]
                     if pad > 0:
                         om_sel = jnp.concatenate(
@@ -456,9 +474,18 @@ class DeviceSweepResult:
         if self._sims is None:
             sims: Dict[Tuple[str, int], Stream] = dict(self.host_sims)
             for sr in self.shard_results:
-                sims.update(materialize_sweep(
-                    self.originals, list(sr.pairs), sr.ss_kept, sr.idx,
-                    sr.totals))
+                if sr.ss_kept is None:
+                    # chunked run: the per-record handles were consumed
+                    # chunk by chunk and the streams are already durable —
+                    # reassemble from the store's chunk files (this loads
+                    # everything to host; bounded-memory callers use
+                    # ``sim_row_counts`` instead of calling materialize)
+                    for sc in sr.pairs:
+                        sims[sc] = self.store.get(self._store_keys[sc])
+                else:
+                    sims.update(materialize_sweep(
+                        self.originals, list(sr.pairs), sr.ss_kept, sr.idx,
+                        sr.totals))
             self._sims = {sc: sims[sc] for sc in self.scenarios}
         if store and not self._persisted:
             shard_scs = [sc for sr in self.shard_results
@@ -879,13 +906,19 @@ def build_report(result: DeviceSweepResult, scenario: Tuple[str, int],
     d, mr = scenario
     stats = result._ensure_stats()[scenario]
     original = result.originals[d]
-    sims = result.materialize()
+    if result.sim_row_counts is not None and scenario in \
+            result.sim_row_counts:
+        # chunked run: the row count was accumulated per chunk — no
+        # whole-stream host pass just to measure it
+        simulated_rows = int(result.sim_row_counts[scenario])
+    else:
+        simulated_rows = len(result.materialize()[scenario])
     degraded = bool(consumer_metrics.get("degraded"))
     return SimulationReport(
         dataset=d,
         max_range=mr,
         original_rows=len(original),
-        simulated_rows=len(sims[scenario]),
+        simulated_rows=simulated_rows,
         compression=compression_factor(original, mr),
         original_volatility=result.om[d].volatility,
         simulated_volatility=stats["volatility"],
@@ -943,4 +976,419 @@ def run_sweep(result: DeviceSweepResult, consumer, *,
         if checkpoint is not None:
             checkpoint.mark_report(r)     # marker lands per report, so a
         reports.append(r)                 # kill leaves a clean prefix
+    return reports, fidelity
+
+
+# ------------------------------------------------------- chunked pipeline
+class ChunkedSweepRunner:
+    """Chunked, double-buffered sweep execution — the unbounded-stream form.
+
+    Splits every scenario's simulated timeline into ``plan.chunk_s``-second
+    chunks and pipelines them through the device: while chunk ``k``'s host
+    leg runs (read totals → gather payload → ``StreamStore.append_chunk``
+    → feed the replay), chunk ``k+1``'s NSA → metrics dispatch is already
+    in flight (JAX async dispatch; the dispatch path never reads a device
+    value, see :func:`~repro.kernels.ops.compact_mask_batched_device`).
+    Cross-chunk state stays device-resident in a
+    :class:`~repro.kernels.ops.ChunkCarry` (running histogram, Kahan
+    ``[Σq, Σq²]`` state, prefix-sum tail, trend window tail), so the
+    per-chunk outputs compose to the monolithic sweep's answer: counts
+    bit-exact, moments within ~1e-5, trend/fidelity within 1e-3.
+
+    Host residency is bounded by construction: per scenario at most the
+    in-flight chunk plus the :class:`~repro.streamsim.producer.ChunkFeed`
+    buffer (``maxsize=2``) exist on host at once — the feed's
+    ``feed_hwm_chunks`` stat is the proof, surfaced in every report's
+    ``consumer_metrics``.
+
+    Resume is chunk-granular: ``append_chunk`` skips chunks already on
+    disk, so a killed multi-day run recomputes device work but rewrites
+    only the missing chunk files, and scenario-level resume (the PR 6
+    marker machinery) still prunes completed scenarios from the plan.
+
+    ``backend`` resolution mirrors :func:`execute_sweep`: resolved
+    ``"pallas"`` runs the device pipeline above (domain errors fall back
+    wholesale at CONSTRUCTION, before any chunk state exists); resolved
+    ``"numpy"`` runs the host composition — whole-stream numpy NSA and
+    f64 statistics (bit-equal reports to the monolithic host path) with
+    the same chunked persist + chunked replay feed.
+    """
+
+    def __init__(self, plan: SweepPlan, originals: Dict[str, Stream],
+                 store, *, backend: str = "auto",
+                 multiple_mode: str = "time",
+                 checkpoint: Optional[SweepCheckpoint] = None):
+        if plan.chunk_s <= 0:
+            raise ValueError(
+                "plan has no chunk axis — build it with plan_sweep("
+                "chunk_s=...) to use the chunked runner")
+        self.plan = plan
+        self.originals = originals
+        self.store = store
+        self.backend = backend
+        self.multiple_mode = multiple_mode
+        self.checkpoint = checkpoint
+        self.chunk_s = int(plan.chunk_s)
+        self._specs = {s.scenario: s for s in plan.scenarios}
+        self._shard_states: List[Dict] = []
+        self._chunk_stats: Dict[str, Dict] = {}
+        self.mode = "host"
+        resolved = _resolve_backend(backend)
+        if resolved == "pallas" and all(
+                len(originals[s.dataset]) > 0 for s in plan.local_missing):
+            from repro.kernels import ops
+            try:
+                self._prep_device()
+                self.mode = "device"
+            except ops.PallasDomainError:
+                self._shard_states = []   # wholesale host fallback
+
+    @property
+    def scenarios(self) -> Tuple[Tuple[str, int], ...]:
+        """The scenarios THIS process replays/reports (grid order) —
+        mirrors :attr:`DeviceSweepResult.scenarios`."""
+        if self.plan.n_hosts == 1:
+            return tuple(s.scenario for s in self.plan.scenarios)
+        local = {s.scenario for s in self.plan.local_missing} | \
+            {s.scenario for s in self.plan.cached}
+        return tuple(s.scenario for s in self.plan.scenarios
+                     if s.scenario in local)
+
+    def _prep_device(self) -> None:
+        """Upload every shard's tables ONCE; domain errors surface here,
+        before any chunk state exists."""
+        import jax
+
+        from repro.kernels import ops
+
+        devices = jax.local_devices()
+        for shard in self.plan.shards:
+            dev = devices[shard.device_index % len(devices)]
+            cn = ChunkedNSA(
+                self.originals,
+                [(s.dataset, s.span_s) for s in shard.specs],
+                multiple_mode=self.multiple_mode, device=dev)
+            self._shard_states.append({
+                "shard": shard,
+                "nsa": cn,
+                "carry": ops.chunk_carry_init(
+                    len(shard.specs), cn.width,
+                    window=REPORT_TREND_WINDOW_S),
+                "totals": np.zeros(len(shard.specs), np.int64),
+            })
+
+    # ------------------------------------------------------------- pipeline
+    def run(self, feeds: Optional[Dict[Tuple[str, int], ChunkFeed]] = None
+            ) -> DeviceSweepResult:
+        """Drive the full chunk pipeline; returns the composed result.
+
+        ``feeds`` (scenario → :class:`ChunkFeed`) receives every chunk
+        stream in round order — chunk ``k`` of EVERY scenario lands
+        before any scenario's chunk ``k+1`` — and each feed is closed
+        after its scenario's last chunk, so the chunked replay walk
+        starts as soon as chunk 0 lands. On any error every feed is
+        closed before re-raising (the producer side unblocks instead of
+        deadlocking).
+        """
+        try:
+            if self.mode == "device":
+                return self._run_device(feeds)
+            return self._run_host(feeds)
+        except BaseException:
+            if feeds:
+                for f in feeds.values():
+                    f.close()
+            raise
+
+    def _note_chunk(self, key: str, chunk: Stream) -> None:
+        """Fold one appended chunk into the manifest stats, so
+        ``finalize_chunks`` never re-reads what this process just wrote."""
+        st = self._chunk_stats.setdefault(
+            key, {"rows": 0, "nbytes": 0, "t_first": None, "t_last": None})
+        st["rows"] += len(chunk)
+        st["nbytes"] += chunk.nbytes()
+        if len(chunk):
+            if st["t_first"] is None:
+                st["t_first"] = float(chunk.t[0])
+            st["t_last"] = float(chunk.t[-1])
+
+    def _manifest_stats(self, key: str) -> Optional[Dict]:
+        st = self._chunk_stats.get(key)
+        if st is None:
+            return None
+        return {"rows": st["rows"], "nbytes": st["nbytes"],
+                "time_range_s": ((st["t_last"] - st["t_first"])
+                                 if st["t_first"] is not None else 0.0)}
+
+    def _feed_chunk(self, feeds, spec, k: int, chunk: Stream) -> None:
+        if feeds is None or spec.scenario not in feeds:
+            return
+        feeds[spec.scenario].put(chunk)
+        if k == spec.n_chunks - 1:
+            feeds[spec.scenario].close()
+
+    @staticmethod
+    def _slice_stream(sim: Stream, lo: int, hi: int) -> Stream:
+        """One chunk of an already-materialized sim (host data): its
+        scale stamps are sorted, so the chunk is one searchsorted slice."""
+        a, b = np.searchsorted(sim.scale_stamp, [lo, hi])
+        return Stream(name=sim.name, t=sim.t[a:b],
+                      payload={c: v[a:b] for c, v in sim.payload.items()},
+                      scale_stamp=sim.scale_stamp[a:b])
+
+    def _host_round(self, result, feeds, k: int,
+                    scenarios: List) -> None:
+        """Push chunk ``k`` of every HOST-materialized scenario (cache
+        hits in device mode; everything in host mode) into the feeds and,
+        for store-missing scenarios, append the chunk file."""
+        missing = {s.scenario for s in self.plan.local_missing}
+        for spec in scenarios:
+            if k >= spec.n_chunks:
+                continue
+            sim = result.host_sims[spec.scenario]
+            lo = k * self.chunk_s
+            hi = min(lo + self.chunk_s, spec.span_s)
+            chunk = self._slice_stream(sim, lo, hi)
+            if self.store and spec.scenario in missing:
+                self.store.append_chunk(spec.store_key, k, chunk)
+                self._note_chunk(spec.store_key, chunk)
+            self._feed_chunk(feeds, spec, k, chunk)
+
+    def _run_device(self, feeds) -> DeviceSweepResult:
+        from repro.kernels import ops
+
+        plan = self.plan
+        result = DeviceSweepResult(plan, self.originals, self.store,
+                                   self.backend, "device")
+        result.checkpoint = self.checkpoint
+        t0 = time.perf_counter()
+        for spec in plan.cached:
+            result.host_sims[spec.scenario] = \
+                self.store.get(spec.store_key)
+        cached = [s for s in plan.scenarios
+                  if s.scenario in result.host_sims]
+
+        def _dispatch(k: int) -> List[Tuple[Dict, object]]:
+            out = []
+            for st in self._shard_states:
+                lo = k * self.chunk_s
+                hi = min(lo + self.chunk_s, st["nsa"].width)
+                if lo >= hi:
+                    continue          # this shard's timeline is over
+                h = st["nsa"].chunk(lo, hi)
+                st["carry"] = ops.stream_metrics_chunk(
+                    st["carry"], h.ss_kept, h.totals, lo, hi)
+                out.append((st, h))
+            return out
+
+        def _host_leg(handles, k: int) -> None:
+            for st, h in handles:
+                # the ONE sync per (shard, chunk) — chunk k+1's dispatch
+                # is already in flight when this blocks
+                totals = np.asarray(h.totals, np.int64)
+                chunks = materialize_sweep_chunk(
+                    self.originals, st["nsa"].pairs, h, totals)
+                for r, spec in enumerate(st["shard"].specs):
+                    if k >= spec.n_chunks:
+                        continue
+                    st["totals"][r] += int(totals[r])
+                    if self.store:
+                        self.store.append_chunk(spec.store_key, k,
+                                                chunks[r])
+                        self._note_chunk(spec.store_key, chunks[r])
+                    self._feed_chunk(feeds, spec, k, chunks[r])
+            self._host_round(result, feeds, k, cached)
+
+        # the double-buffered loop: dispatch k, THEN drain k-1's host leg
+        prev: Optional[Tuple[List, int]] = None
+        for k in range(plan.n_chunks):
+            cur = _dispatch(k)
+            if prev is not None:
+                _host_leg(*prev)
+            prev = (cur, k)
+        if prev is not None:
+            _host_leg(*prev)
+
+        # compose: fold each shard's carry into monolithic-shaped stats
+        for st in self._shard_states:
+            hist, mom2 = ops.chunk_carry_finalize(st["carry"])
+            result.shard_results.append(ShardResult(
+                shard=st["shard"],
+                pairs=tuple(s.scenario for s in st["shard"].specs),
+                ss_kept=None, idx=None, totals=st["totals"].copy(),
+                hist=hist, mom=np.asarray(mom2, np.float64), nsa_s=0.0))
+        if self.store:
+            for st in self._shard_states:
+                for spec in st["shard"].specs:
+                    self.store.finalize_chunks(
+                        spec.store_key,
+                        name=self.originals[spec.dataset].name,
+                        n_chunks=spec.n_chunks,
+                        extra_meta={"max_range": spec.max_range},
+                        stats=self._manifest_stats(spec.store_key))
+            result._persisted = True
+            if self.checkpoint is not None:
+                self.checkpoint.mark_materialized(
+                    [s.scenario for s in plan.local_missing])
+        total_s = time.perf_counter() - t0
+        for sc in (s.scenario for s in plan.scenarios):
+            result.nsa_s[sc] = 0.0
+        result.sim_row_counts = {}
+        for sr in result.shard_results:
+            for r, sc in enumerate(sr.pairs):
+                result.nsa_s[sc] = total_s
+                result.sim_row_counts[sc] = int(sr.totals[r])
+        for spec in plan.cached:
+            result.sim_row_counts[spec.scenario] = \
+                len(result.host_sims[spec.scenario])
+        return result
+
+    def _run_host(self, feeds) -> DeviceSweepResult:
+        plan = self.plan
+        result = DeviceSweepResult(plan, self.originals, self.store,
+                                   self.backend, "host")
+        result.checkpoint = self.checkpoint
+        t0 = time.perf_counter()
+        for spec in plan.local_missing:
+            result.host_sims[spec.scenario] = nsa(
+                self.originals[spec.dataset], spec.span_s,
+                multiple_mode=self.multiple_mode, backend="numpy")
+        t_sweep = time.perf_counter() - t0
+        for spec in plan.cached:
+            result.host_sims[spec.scenario] = \
+                self.store.get(spec.store_key)
+        local = [s for s in plan.scenarios
+                 if s.scenario in result.host_sims]
+        for k in range(plan.n_chunks):
+            self._host_round(result, feeds, k, local)
+        if self.store:
+            for spec in plan.local_missing:
+                self.store.finalize_chunks(
+                    spec.store_key,
+                    name=result.host_sims[spec.scenario].name,
+                    n_chunks=spec.n_chunks,
+                    extra_meta={"max_range": spec.max_range},
+                    stats=self._manifest_stats(spec.store_key))
+            result._persisted = True
+            if self.checkpoint is not None:
+                self.checkpoint.mark_materialized(
+                    [s.scenario for s in plan.local_missing])
+        for spec in plan.scenarios:
+            result.nsa_s[spec.scenario] = 0.0 if spec.cached else t_sweep
+        scenarios = [sc for sc in (s.scenario for s in plan.scenarios)
+                     if sc in result.host_sims]
+        datasets = list(plan.datasets)
+        ms = metrics_batched(
+            [self.originals[d] for d in datasets] +
+            [result.host_sims[sc] for sc in scenarios],
+            [None] * len(datasets) +
+            [self._specs[sc].span_s for sc in scenarios],
+            backend=self.backend)
+        result._om = dict(zip(datasets, ms[:len(datasets)]))
+        result.sm = dict(zip(scenarios, ms[len(datasets):]))
+        result._host_group_done = True
+        result._sims = {sc: result.host_sims[sc] for sc in scenarios}
+        result.sim_row_counts = {sc: len(result.host_sims[sc])
+                                 for sc in scenarios}
+        return result
+
+
+def run_sweep_chunked(runner: ChunkedSweepRunner, consumer, *,
+                      queue_size: int = 64, fidelity_window_s: int = 60,
+                      t_pre: Optional[Dict[str, float]] = None,
+                      fault_plan: Optional[FaultPlan] = None,
+                      on_failure: str = "raise",
+                      max_bytes: Optional[int] = None,
+                      retention_policy: str = "block",
+                      checkpoint: Optional[SweepCheckpoint] = None
+                      ) -> Tuple[List[SimulationReport],
+                                 List[FidelityReport]]:
+    """Layer 3 of the chunked pipeline: compute, persist and REPLAY
+    chunk-overlapped.
+
+    The calling thread drives :meth:`ChunkedSweepRunner.run`; the
+    :class:`~repro.streamsim.producer.MultiQueueProducer` (chunked walk)
+    and the per-scenario consumers run on their own threads, consuming
+    each scenario's :class:`~repro.streamsim.producer.ChunkFeed`
+    (``maxsize=2``) — replay of chunk 0 starts while chunk 1 is still on
+    device, and backpressure chains queue → feed → runner so host
+    residency stays bounded end to end.
+
+    Differences from :func:`run_sweep` (by design): no
+    ``retry_policy``/``consumer_deadline_s`` — a chunked replay cannot
+    rewind a scenario's stream (its chunks are consumed as produced), so
+    scenario-grain solo retries are a monolithic-path feature;
+    ``on_failure="degrade"`` still converts terminal consumer failures
+    into partial reports. Fault injection (``fault_plan``) applies
+    unchanged — the producer-side transport schedule walks the chunked
+    rounds identically to the monolithic walk.
+    """
+    if on_failure not in ("raise", "degrade"):
+        raise ValueError(
+            f"on_failure must be 'raise' or 'degrade', got {on_failure!r}")
+    t_pre = t_pre or {}
+    scenarios = list(runner.scenarios)
+    feeds = {sc: ChunkFeed(maxsize=2) for sc in scenarios}
+    group = QueueGroup(feeds, maxsize=queue_size, max_bytes=max_bytes,
+                       retention_policy=retention_policy)
+    producer = MultiQueueProducer(feeds, group.queues,
+                                  clock=VirtualClock(),
+                                  fault_plan=fault_plan)
+    wrapped = {sc: (fault_plan.wrap_consumer(sc, consumer)
+                    if fault_plan is not None else consumer)
+               for sc in scenarios}
+    status = [None]
+    results: Dict = {}
+    errors: Dict[object, BaseException] = {}
+
+    def _produce():
+        status[0] = producer.run()
+
+    def _consume(sc):
+        try:
+            results[sc] = wrapped[sc](group[sc])
+        except Exception as exc:    # keep the producer walk drainable
+            errors[sc] = exc
+            for _ in group[sc]:
+                pass
+
+    t0 = time.perf_counter()
+    prod_th = threading.Thread(target=_produce, daemon=True)
+    cons = {sc: threading.Thread(target=_consume, args=(sc,), daemon=True)
+            for sc in scenarios}
+    prod_th.start()
+    for th in cons.values():
+        th.start()
+    result = runner.run(feeds)       # the chunk pipeline, on THIS thread
+    prod_th.join()
+    for th in cons.values():
+        th.join()
+    t_prod = time.perf_counter() - t0
+    if errors and on_failure == "raise":
+        ordered = [(sc, errors[sc]) for sc in scenarios if sc in errors]
+        detail = "; ".join(f"{sc!r}: {exc!r}" for sc, exc in ordered)
+        raise RuntimeError(
+            f"{len(ordered)} of {len(scenarios)} chunked sweep "
+            f"consumer(s) failed: {detail}") from ordered[0][1]
+    if status[0] != 0:
+        raise RuntimeError("producer reported fault status")
+
+    all_metrics: Dict = {}
+    for sc in scenarios:
+        if sc in errors:
+            all_metrics[sc] = {
+                "degraded": True, "failed": repr(errors[sc]),
+                "attempts": 1, **group[sc].stats(), **producer.stats(sc)}
+        else:
+            all_metrics[sc] = {**results[sc], **group[sc].stats(),
+                               **producer.stats(sc)}
+    fidelity = result.fidelity(fidelity_window_s)
+    result._ensure_stats()
+    reports = []
+    for sc in result.scenarios:
+        r = build_report(result, sc, t_pre.get(sc[0], 0.0), t_prod,
+                         all_metrics[sc])
+        if checkpoint is not None:
+            checkpoint.mark_report(r)
+        reports.append(r)
     return reports, fidelity

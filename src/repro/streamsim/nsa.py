@@ -66,8 +66,9 @@ Every backend produces bit-identical output for the same arguments.
 
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -458,6 +459,182 @@ def materialize_sweep(streams: Dict[str, Stream],
             payload={k: v[idx] for k, v in src.payload.items()},
             scale_stamp=ss_host[r, :total],
         )
+    return out
+
+
+@dataclasses.dataclass
+class ChunkHandles:
+    """Device handles for ONE chunk of a chunked sweep (see ChunkedNSA).
+
+    ``ss_kept``/``idx``/``totals`` are device arrays — reading any of them
+    forces a sync, which the pipeline defers until the NEXT chunk's
+    dispatch is in flight. ``idx`` entries are LOCAL to the chunk's record
+    slice; add ``rec_off[r]`` (host int64) to recover absolute record
+    indices into the source stream.
+    """
+    ss_kept: object          # (R, Nc) int32 device — kept scale stamps
+    idx: object              # (R, Nc) int32 device — local kept indices
+    totals: object           # (R,)    int32 device — kept counts
+    rec_off: np.ndarray      # (R,)    int64 host   — record slice offsets
+    lo: int                  # chunk bucket range [lo, hi)
+    hi: int
+
+
+class ChunkedNSA:
+    """Per-chunk device NSA over a scenario grid — the unbounded-stream form.
+
+    Uploads each row's full-width bucket tables and (rebased f32)
+    timestamps to the device ONCE, then serves the timeline chunk by
+    chunk: ``chunk(lo, hi)`` runs the range-padded ``stream_sample``
+    kernel on just the record slice whose scale stamps land in
+    ``[lo, hi)`` and compacts its keep mask — all device-resident, no
+    host sync (totals stay on device; see
+    :func:`repro.kernels.ops.compact_mask_batched_device`).
+
+    Bit-exactness with the monolithic sweep: a chunk's records are a
+    CONTIGUOUS slice ``[starts[lo], starts[hi])`` of the sorted stream
+    (records never split a bucket), and the kernel is launched with the
+    full-width tables rebased by the slice offset — so each record sees
+    the same f32 timestamp, the same snapped bucket and the same
+    in-bucket rank as in the monolithic launch, and the keep bits are
+    bit-identical. Concatenating the chunks reproduces
+    :func:`nsa_sweep_device` exactly.
+
+    Parameters
+    ----------
+    streams : dict of str -> Stream
+        Source streams (non-empty).
+    pairs : sequence of (name, eff_range)
+        Scenario rows; ``eff_range`` is the row's EFFECTIVE simulated
+        range (``ScenarioSpec.span_s`` — ``max_range`` per simulated day).
+    multiple_mode : {"time", "records"}
+        As in :func:`nsa`.
+    device : optional
+        jax device everything is committed to.
+
+    Raises
+    ------
+    PallasDomainError
+        At construction, when any row falls outside the kernels'
+        exactness domain — callers fall back to the host path before any
+        chunk state exists.
+    """
+
+    def __init__(self, streams: Dict[str, Stream],
+                 pairs: Sequence[Tuple[str, int]], *,
+                 multiple_mode: str = "time", device=None):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops
+
+        self.pairs = [(name, int(rng)) for name, rng in pairs]
+        if not self.pairs:
+            raise ValueError("need at least one scenario row")
+        if any(rng <= 0 for _, rng in self.pairs):
+            raise ValueError("ranges must be positive")
+        ts = [np.asarray(streams[name].t, np.float64)
+              for name, _ in self.pairs]
+        if any(len(t) == 0 for t in ts):
+            raise ValueError("chunked path requires non-empty streams")
+        self.lengths = np.array([len(t) for t in ts], np.int64)
+        self.width = max(rng for _, rng in self.pairs)
+        R = len(self.pairs)
+        self.N = max(int(-(-self.lengths.max() // ops.TILE) * ops.TILE),
+                     ops.TILE)
+        ops._check_metrics_domain(self.N)  # any chunk's kept width <= N
+        mults = [_multiple(len(streams[name]), streams[name].time_range,
+                           rng, multiple_mode)
+                 for name, rng in self.pairs]
+        t_b = np.empty((R, self.N), np.float32)
+        starts_b = np.empty((R, self.width), np.int32)
+        counts_b = np.empty((R, self.width), np.int32)
+        k_b = np.empty((R, self.width), np.int32)
+        scal_b = np.empty((R, 3), np.float32)
+        for r, t64 in enumerate(ts):
+            t32, starts, counts, ktab, scalars = ops._nsa_tables(
+                t64, self.pairs[r][1], float(mults[r]), self.width)
+            t_b[r, :len(t32)] = t32
+            t_b[r, len(t32):] = t32[-1]      # pad into the last bucket
+            starts_b[r], counts_b[r], k_b[r] = starts, counts, ktab
+            scal_b[r] = scalars
+        # host copy for slicing: col lo gives the first record of bucket
+        # lo (tail buckets carry starts = n, so rows whose range ends
+        # before the sweep's maximum contribute empty slices for free)
+        self._starts_np = starts_b.astype(np.int64)
+
+        def _dev(x):
+            return jax.device_put(x, device) if device is not None \
+                else jnp.asarray(x)
+
+        self._dev = _dev
+        self._t = _dev(t_b)
+        self._starts = _dev(starts_b)
+        self._counts = _dev(counts_b)
+        self._ktab = _dev(k_b)
+        self._scal = _dev(scal_b)
+
+    def n_chunks(self, chunk_s: int) -> int:
+        return -(-self.width // int(chunk_s))
+
+    def chunk(self, lo: int, hi: int) -> ChunkHandles:
+        """Dispatch NSA for absolute buckets ``[lo, hi)`` — async, no sync.
+
+        The returned handles stay on device; the host reads them via
+        :func:`materialize_sweep_chunk` one pipeline step later.
+        """
+        import jax.numpy as jnp
+        from repro.kernels import ops
+
+        lo, hi = int(lo), int(hi)
+        if not 0 <= lo < hi <= self.width:
+            raise ValueError(f"bad chunk range [{lo}, {hi}) for width "
+                             f"{self.width}")
+        a = self._starts_np[:, lo]
+        b = self.lengths if hi >= self.width else self._starts_np[:, hi]
+        m = b - a
+        Nc = max(int(-(-max(int(m.max()), 1) // ops.TILE) * ops.TILE),
+                 ops.TILE)
+        a_dev = self._dev(a.astype(np.int32))
+        j = jnp.arange(Nc, dtype=jnp.int32)[None, :]
+        gidx = jnp.clip(a_dev[:, None] + j, 0, self.N - 1)
+        t_slice = jnp.take_along_axis(self._t, gidx, axis=1)
+        # rebase the bucket tables by the slice offset: local rank ==
+        # global rank, so the keep bits match the monolithic launch
+        starts_reb = self._starts - a_dev[:, None]
+        ss, keep = ops.stream_sample_pallas(
+            t_slice, starts_reb, self._counts, self._ktab, self._scal,
+            self.width, interpret=not ops.on_tpu())
+        keep = keep.astype(bool) & (j < self._dev(m.astype(np.int32))[:, None])
+        idx, totals = ops.compact_mask_batched_device(keep)
+        ss_kept = jnp.take_along_axis(ss, jnp.clip(idx, 0, max(Nc - 1, 0)),
+                                      axis=1)
+        return ChunkHandles(ss_kept=ss_kept, idx=idx, totals=totals,
+                            rec_off=a, lo=lo, hi=hi)
+
+
+def materialize_sweep_chunk(streams: Dict[str, Stream],
+                            pairs: Sequence[Tuple[str, int]],
+                            handles: ChunkHandles,
+                            totals: np.ndarray) -> List[Stream]:
+    """Host gather for ONE chunk — the pipeline's only sync point.
+
+    ``totals`` is the host copy of ``handles.totals`` (the caller reads
+    it first so the device sync happens exactly once per chunk, after the
+    next chunk's dispatch is already in flight). Returns one Stream per
+    scenario row, in ``pairs`` order.
+    """
+    ss_host = np.asarray(handles.ss_kept).astype(np.int64)
+    idx_host = np.asarray(handles.idx)
+    out = []
+    for r, (name, _) in enumerate(pairs):
+        src, total = streams[name], int(totals[r])
+        gi = idx_host[r, :total].astype(np.int64) + int(handles.rec_off[r])
+        out.append(Stream(
+            name=src.name,
+            t=src.t[gi],
+            payload={k: v[gi] for k, v in src.payload.items()},
+            scale_stamp=ss_host[r, :total],
+        ))
     return out
 
 

@@ -40,6 +40,10 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 #: row length is padded to (kept in sync with ``repro.kernels`` TILE)
 ROW_TILE = 1024
 
+#: one day of wall-clock seconds — the native timeline of every dataset
+#: (kept in sync with ``repro.streamsim.datasets.DAY``)
+DAY_S = 86_400
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
@@ -51,15 +55,50 @@ class ScenarioSpec:
     seed: int
     rows: int      #: source-stream record count (the shard-cost input)
     cached: bool   #: simulated stream already in the store (no NSA work)
+    #: time axis (PR 7): 0 keeps the monolithic single-dispatch path.
+    #: ``chunk_s`` slices the scale-stamp timeline into fixed chunks;
+    #: ``duration_s`` stretches the scenario past one day (0 = the
+    #: dataset's native range, i.e. ``max_range``).
+    chunk_s: int = 0
+    duration_s: int = 0
 
     @property
     def store_key(self) -> str:
-        return f"{self.dataset}__sim{self.max_range}"
+        # chunk_s deliberately does NOT enter the key: chunked and
+        # monolithic runs produce bit-equal simulated streams, so they
+        # share the cache. A non-default duration is a different stream.
+        base = f"{self.dataset}__sim{self.max_range}"
+        if self.duration_s:
+            base += f"__d{self.duration_s}"
+        return base
 
     @property
     def scenario(self) -> Tuple[str, int]:
         """The (dataset, max_range) report key."""
         return (self.dataset, self.max_range)
+
+    @property
+    def n_days(self) -> int:
+        """Days of original data the scenario covers (1 when
+        ``duration_s`` is 0 — the native one-day stream)."""
+        if self.duration_s <= 0:
+            return 1
+        return -(-self.duration_s // DAY_S)
+
+    @property
+    def span_s(self) -> int:
+        """Seconds of simulated (scale-stamp) timeline this scenario
+        covers: each original day compresses into ``max_range`` simulated
+        seconds, so multi-day runs keep the per-day compression ratio and
+        diurnal cycles stay aligned across days."""
+        return int(self.max_range) * self.n_days
+
+    @property
+    def n_chunks(self) -> int:
+        """Number of time chunks (1 when ``chunk_s`` is 0/monolithic)."""
+        if self.chunk_s <= 0:
+            return 1
+        return -(-self.span_s // self.chunk_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +132,13 @@ class Shard:
         NOT the sweep-wide maximum, which is the monolith's padding)."""
         return max((s.max_range for s in self.specs), default=0)
 
+    @property
+    def span_s(self) -> int:
+        """Simulated-timeline width the shard's chunk grid covers — the
+        per-spec :attr:`ScenarioSpec.span_s` maximum (equals
+        :attr:`max_range` for single-day sweeps)."""
+        return max((s.span_s for s in self.specs), default=0)
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
@@ -109,6 +155,8 @@ class SweepPlan:
     host_index: int
     n_hosts: int
     n_devices: int
+    chunk_s: int = 0      #: time-chunk size in seconds (0 = monolithic)
+    duration_s: int = 0   #: timeline length in seconds (0 = native range)
 
     @property
     def local_missing(self) -> Tuple[ScenarioSpec, ...]:
@@ -116,15 +164,25 @@ class SweepPlan:
         return tuple(s for sh in self.shards for s in sh.specs)
 
     @property
+    def n_chunks(self) -> int:
+        """Chunk rounds the engine runs — the max over scenarios (chunked
+        runs keep the whole sweep on one aligned chunk grid; scenarios
+        with a shorter timeline simply finish early)."""
+        return max((s.n_chunks for s in self.scenarios), default=1)
+
+    @property
     def sweep_id(self) -> str:
         """Stable identity of the sweep *configuration* (grid + scale +
         seed + host slot) — the checkpoint namespace key. Deliberately
         independent of cache-hit state: a restarted run whose first
         attempt already materialized some scenarios must still find its
-        own markers."""
+        own markers. The time axis enters the hash only when non-default,
+        so every pre-existing sweep keeps its id."""
         import hashlib
         ident = repr((tuple(self.datasets), tuple(self.max_ranges),
                       self.scale, self.seed, self.host_index, self.n_hosts))
+        if self.chunk_s or self.duration_s:
+            ident += repr((self.chunk_s, self.duration_s))
         return hashlib.sha256(ident.encode()).hexdigest()[:16]
 
     def padded_area(self) -> int:
@@ -198,7 +256,8 @@ def plan_sweep(store, datasets: Sequence[str], max_ranges: Sequence[int],
                pairs: Optional[Sequence[Tuple[str, int]]] = None,
                n_devices: Optional[int] = None,
                host_index: Optional[int] = None,
-               n_hosts: Optional[int] = None) -> SweepPlan:
+               n_hosts: Optional[int] = None,
+               chunk_s: int = 0, duration_s: int = 0) -> SweepPlan:
     """Build the :class:`SweepPlan` for a (datasets × max_ranges) sweep.
 
     Parameters
@@ -225,6 +284,13 @@ def plan_sweep(store, datasets: Sequence[str], max_ranges: Sequence[int],
         automatically takes only its own strided slice of the missing
         scenarios. Override for tests (e.g. forcing 4 shards on 1 device)
         or external schedulers.
+    chunk_s, duration_s :
+        Time axis (PR 7). ``chunk_s > 0`` routes execution through the
+        chunked double-buffered pipeline (``ChunkedSweepRunner``) in
+        ``chunk_s``-second time slices; ``duration_s > 0`` extends each
+        scenario's timeline past its native range (multi-day sweeps).
+        Defaults keep the monolithic behavior, store keys, and sweep ids
+        unchanged.
 
     Returns
     -------
@@ -237,6 +303,11 @@ def plan_sweep(store, datasets: Sequence[str], max_ranges: Sequence[int],
         pairs = [(d, int(mr)) for d, mr in pairs]
     if any(mr <= 0 for _, mr in pairs):
         raise ValueError("max_range must be positive")
+    chunk_s, duration_s = int(chunk_s), int(duration_s)
+    if chunk_s < 0:
+        raise ValueError("chunk_s must be >= 0")
+    if duration_s < 0:
+        raise ValueError("duration_s must be >= 0")
     if n_devices is None or host_index is None or n_hosts is None:
         from repro.distributed import process_topology
         pidx, pcount, local = process_topology()
@@ -251,11 +322,15 @@ def plan_sweep(store, datasets: Sequence[str], max_ranges: Sequence[int],
     if n_devices < 1:
         raise ValueError("n_devices must be >= 1")
 
+    def _key(d: str, mr: int) -> str:
+        return (f"{d}__sim{mr}__d{duration_s}" if duration_s
+                else f"{d}__sim{mr}")
+
     specs = tuple(
         ScenarioSpec(dataset=d, max_range=mr, scale=scale, seed=seed,
                      rows=int(row_counts[d]),
-                     cached=bool(not force and
-                                 store.exists(f"{d}__sim{mr}")))
+                     cached=bool(not force and store.exists(_key(d, mr))),
+                     chunk_s=chunk_s, duration_s=duration_s)
         for d, mr in pairs)
     cached = tuple(s for s in specs if s.cached)
     missing = tuple(s for s in specs if not s.cached)
@@ -272,4 +347,5 @@ def plan_sweep(store, datasets: Sequence[str], max_ranges: Sequence[int],
                      max_ranges=tuple(int(m) for m in max_ranges),
                      scale=scale, seed=seed, scenarios=specs, cached=cached,
                      missing=missing, shards=shards, host_index=host_index,
-                     n_hosts=n_hosts, n_devices=n_devices)
+                     n_hosts=n_hosts, n_devices=n_devices,
+                     chunk_s=chunk_s, duration_s=duration_s)

@@ -104,15 +104,153 @@ class StreamStore:
         for key, stream in items.items():
             self.put(key, stream, extra_meta.get(key))
 
+    # ----------------------------------------------------------- chunk put
+    # PR 7: the chunked pipeline persists one time chunk at a time so a
+    # multi-day run never holds (or rewrites) the whole stream on host.
+    # Each chunk is its own atomically-renamed ``columns.00042.npz``;
+    # the manifest (written LAST, by ``finalize_chunks``) is what makes
+    # the key visible to ``exists()``/``get()``, so a kill mid-run leaves
+    # a resumable pile of chunk files, never a half-stream. ``get`` then
+    # concatenates transparently — callers can't tell a chunked stream
+    # from a monolithic one.
+
+    @staticmethod
+    def _chunk_file(d: Path, chunk_idx: int) -> Path:
+        if chunk_idx < 0:
+            raise ValueError(f"bad chunk index {chunk_idx}")
+        return d / f"columns.{chunk_idx:05d}.npz"
+
+    def append_chunk(self, key: str, chunk_idx: int, stream: Stream,
+                     overwrite: bool = False) -> bool:
+        """Persist one time chunk of ``key`` (atomic per chunk).
+
+        Returns False (and writes nothing) when the chunk file already
+        exists and ``overwrite`` is unset — the chunk-granular resume
+        path: a restarted run calls ``append_chunk`` for every chunk and
+        only the missing tail actually hits the disk.
+        """
+        d = self._dir(key)
+        target = self._chunk_file(d, chunk_idx)
+        if target.exists() and not overwrite:
+            return False
+        d.mkdir(parents=True, exist_ok=True)
+        arrays: Dict[str, np.ndarray] = {"__t__": stream.t}
+        if stream.scale_stamp is not None:
+            arrays["__scale_stamp__"] = stream.scale_stamp
+        for k, v in stream.payload.items():
+            arrays[f"c:{k}"] = v
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, target)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return True
+
+    def has_chunk(self, key: str, chunk_idx: int) -> bool:
+        return self._chunk_file(self._dir(key), chunk_idx).exists()
+
+    def list_chunks(self, key: str) -> List[int]:
+        d = self._dir(key)
+        if not d.exists():
+            return []
+        out = []
+        for p in d.iterdir():
+            name = p.name
+            if (name.startswith("columns.") and name.endswith(".npz")
+                    and name != _COLUMNS):
+                mid = name[len("columns."):-len(".npz")]
+                if mid.isdigit():
+                    out.append(int(mid))
+        return sorted(out)
+
+    def finalize_chunks(self, key: str, *, name: str, n_chunks: int,
+                        extra_meta: Optional[Dict] = None,
+                        stats: Optional[Dict] = None) -> None:
+        """Write the manifest that turns ``n_chunks`` appended chunk files
+        into one visible stream. Verifies the chunk set is complete
+        (missing chunk ⇒ ValueError, key stays invisible).
+
+        ``stats`` (keys ``rows``, ``nbytes``, ``time_range_s``) lets a
+        writer that held every chunk in memory skip the re-read this
+        method otherwise does to assemble the manifest — the chunked
+        sweep runner's hot path. Without it, the chunk files are read
+        back (the standalone / recovery path).
+        """
+        d = self._dir(key)
+        have = set(self.list_chunks(key))
+        missing = [i for i in range(n_chunks) if i not in have]
+        if missing:
+            raise ValueError(
+                f"cannot finalize {key!r}: missing chunk(s) {missing[:8]}")
+        if stats is not None:
+            rows = int(stats["rows"])
+            nbytes = int(stats["nbytes"])
+            time_range_s = float(stats["time_range_s"])
+        else:
+            rows = 0
+            nbytes = 0
+            t_first = t_last = None
+            for i in range(n_chunks):
+                with np.load(self._chunk_file(d, i),
+                             allow_pickle=False) as z:
+                    t = z["__t__"]
+                    rows += len(t)
+                    nbytes += sum(int(z[k].nbytes) for k in z.files)
+                    if len(t):
+                        if t_first is None:
+                            t_first = float(t[0])
+                        t_last = float(t[-1])
+            time_range_s = ((t_last - t_first)
+                            if t_first is not None else 0.0)
+        manifest = {
+            "name": name,
+            "rows": rows,
+            "has_scale_stamp": True,
+            "time_range_s": time_range_s,
+            "nbytes": nbytes,
+            "written_at": time.time(),
+            "chunks": n_chunks,
+            "extra": extra_meta or {},
+        }
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(manifest, f, indent=2)
+            os.replace(tmp, d / _MANIFEST)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
     # ------------------------------------------------------------------- get
     def get(self, key: str) -> Stream:
         d = self._dir(key)
+        man = self.manifest(key)
+        n_chunks = int(man.get("chunks", 0))
+        if n_chunks:
+            ts, sss, payloads = [], [], []
+            for i in range(n_chunks):
+                with np.load(self._chunk_file(d, i),
+                             allow_pickle=False) as z:
+                    ts.append(z["__t__"])
+                    if "__scale_stamp__" in z.files:
+                        sss.append(z["__scale_stamp__"])
+                    payloads.append({k[2:]: z[k] for k in z.files
+                                     if k.startswith("c:")})
+            t = np.concatenate(ts) if ts else np.empty(0)
+            ss = np.concatenate(sss) if len(sss) == n_chunks else None
+            cols = payloads[0].keys() if payloads else ()
+            payload = {c: np.concatenate([p[c] for p in payloads])
+                       for c in cols}
+            return Stream(name=man["name"], t=t, payload=payload,
+                          scale_stamp=ss)
         with np.load(d / _COLUMNS, allow_pickle=False) as z:
             t = z["__t__"]
             ss = z["__scale_stamp__"] if "__scale_stamp__" in z.files else None
             payload = {k[2:]: z[k] for k in z.files if k.startswith("c:")}
-        name = self.manifest(key)["name"]
-        return Stream(name=name, t=t, payload=payload, scale_stamp=ss)
+        return Stream(name=man["name"], t=t, payload=payload, scale_stamp=ss)
 
     def manifest(self, key: str) -> Dict:
         with open(self._dir(key) / _MANIFEST) as f:
@@ -120,7 +258,10 @@ class StreamStore:
 
     def delete(self, key: str) -> None:
         d = self._dir(key)
-        for p in (d / _COLUMNS, d / _MANIFEST):
+        targets = [d / _COLUMNS, d / _MANIFEST]
+        if d.exists():
+            targets += [self._chunk_file(d, i) for i in self.list_chunks(key)]
+        for p in targets:
             if p.exists():
                 p.unlink()
         if d.exists() and not any(d.iterdir()):
