@@ -1,0 +1,119 @@
+"""PR 8 trajectory rows: the stream-task tier's paper-claim comparison.
+
+The paper's validation (§6) runs a stream task against the original
+day-long stream AND the NSA-compressed simulated stream, claiming the
+simulated run is >= 24x faster while the task sees the same volatility
+and trends. :class:`~repro.streamsim.taskbench.TaskBenchRunner` is that
+experiment as code; these rows are its CI record — one row per task in
+the RIoTBench-style suite, each gated by ``check_regression.py`` against
+``original_replay_us`` (the original-replay leg it replaces):
+
+- ``PR8/task_etl``, ``PR8/task_windowed_stats``,
+  ``PR8/task_event_detect`` — the bucket tasks over the sliced sogouq
+  morning (QUICK / off-TPU) or the full synthetic day (TPU), gated at
+  >= 4x (observed 30-60x; the paper's 24x needs the full-day span, so
+  the CI gate is deliberately conservative at reduced spans) and
+  hard-checked here against ``FIDELITY_FLOOR``: a row whose task-output
+  trend correlation between the two replays falls below the documented
+  floor FAILS the benchmark run itself — the fidelity half of the claim
+  is a gate, not a footnote.
+- ``PR8/task_serving`` — the serving engine load-tested by the diurnal
+  userbehavior arrival mix (the million-user trace at reduced scale),
+  ``reuse_engine=True`` so decode traces stay warm across legs, with an
+  explicit warmup call so neither timed leg pays compilation. Gated at
+  >= 2x (observed ~15x). Its fidelity is recorded but NOT floor-checked:
+  the admission cap (``max_requests_per_bucket``) intentionally
+  saturates the output series under load, which is the load-test point.
+
+Every row records ``paper_ratio=24`` (the headline figure), the measured
+``speedup``, ``fidelity``, both volatility digests, and the
+p50/p99/p999 latency summarized from the device-resident histogram path
+(ONE fused ``stream_metrics_batched`` dispatch per task sweep).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.kernels import ops
+from repro.streamsim import (
+    ETLTask,
+    EventDetectTask,
+    FIDELITY_FLOOR,
+    PAPER_SPEEDUP,
+    ServingTask,
+    TaskBenchRunner,
+    WindowedStatsTask,
+)
+from repro.streamsim.queue import Bucket, StreamQueue
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _row(csv: List[str], rep, tag: str) -> None:
+    lat = rep.latency
+    csv.append(
+        f"PR8/task_{rep.task.replace('-', '_')}{tag},"
+        f"{rep.t_simulated_s * 1e6:.0f},"
+        f"original_replay_us={rep.t_original_s * 1e6:.0f};"
+        f"speedup={rep.speedup:.1f}x;paper_ratio={rep.paper_ratio:.0f};"
+        f"fidelity={rep.trend_fidelity:.3f};"
+        f"cv_orig={rep.cv_original:.3f};cv_sim={rep.cv_simulated:.3f};"
+        f"dataset={rep.dataset};max_range={rep.max_range};"
+        f"records_sim={rep.records_simulated};"
+        f"p50_us={lat['p50_us']:.1f};p99_us={lat['p99_us']:.1f};"
+        f"p999_us={lat['p999_us']:.1f};jitter_us={lat['jitter_us']:.1f}")
+
+
+def _serving_task():
+    """Tiny consumer-LM serving task (CPU-sized; shapes are static so one
+    warmup call compiles prefill + decode for every later leg)."""
+    import jax
+    import numpy as np
+    from repro.configs.paper_stream import consumer_lm
+    from repro.models import transformer as T
+
+    cfg = consumer_lm().replace(n_layers=2, d_model=64, n_heads=4,
+                                n_kv_heads=2, head_dim=16, d_ff=128,
+                                vocab_size=512, loss_chunk=16)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    task = ServingTask(cfg, params, slots=4, max_len=48, prompt_len=4,
+                       max_new_tokens=3, max_requests_per_bucket=1,
+                       reuse_engine=True)
+    warm = StreamQueue(maxsize=4)
+    for s in range(2):
+        warm.put(Bucket(scale_stamp=s, t=np.zeros(1),
+                        payload={"x": np.zeros(1)}, emit_time=0.0))
+    warm.close()
+    task(warm)
+    return task
+
+
+def run(csv: List[str]) -> None:
+    # --- bucket tasks: the paper comparison on the sogouq diurnal ramp ---
+    if ops.on_tpu() and not QUICK:
+        span_s, tag = None, ""            # full synthetic day
+    else:
+        span_s, tag = 7200, "@2h"         # morning ramp: fast AND diurnal
+    runner = TaskBenchRunner(["sogouq"], [100], scale=0.3, seed=0,
+                             span_s=span_s)
+    reports = runner.run([
+        ETLTask(),
+        WindowedStatsTask(window_s=30),
+        EventDetectTask(mode="threshold", threshold=4.0),
+    ])
+    for rep in reports:
+        if rep.trend_fidelity < FIDELITY_FLOOR:
+            raise RuntimeError(
+                f"task {rep.task!r} trend fidelity {rep.trend_fidelity:.3f}"
+                f" fell below the documented floor {FIDELITY_FLOOR} "
+                f"(dataset={rep.dataset}, max_range={rep.max_range}) — "
+                "the equivalence half of the paper claim regressed")
+        assert rep.paper_ratio == PAPER_SPEEDUP
+        _row(csv, rep, tag)
+
+    # --- serving task: diurnal million-user arrival mix, warm engine -----
+    sruns = TaskBenchRunner(["userbehavior"], [60], scale=0.02, seed=0,
+                            span_s=900).run([_serving_task()])
+    _row(csv, sruns[0], "@ub900s")

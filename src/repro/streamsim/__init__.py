@@ -74,8 +74,27 @@ from repro.streamsim.engine import (  # noqa: F401
     DeviceSweepResult,
     FidelityReport,
     SimulationReport,
+    consumer_label,
     execute_sweep,
     run_sweep,
     run_sweep_chunked,
 )
 from repro.streamsim.controller import Controller  # noqa: F401
+from repro.streamsim.tasks import (  # noqa: F401
+    BucketTask,
+    ETLTask,
+    EventDetectTask,
+    ServingTask,
+    StreamTask,
+    WindowedStatsTask,
+)
+from repro.streamsim.taskbench import (  # noqa: F401
+    FIDELITY_FLOOR,
+    PAPER_SPEEDUP,
+    LatencySummary,
+    TaskBenchRunner,
+    TaskReport,
+    original_replay_stream,
+    slice_stream,
+    summarize_latencies,
+)

@@ -658,6 +658,28 @@ def replay_one(sim: Stream, consumer, queue_size: int, faults=None):
             t_prod)
 
 
+def consumer_label(consumer) -> Optional[str]:
+    """The task name a consumer advertises — ``.name`` on the task tier
+    (:mod:`repro.streamsim.tasks`), ``.task_name`` or ``.__name__`` as
+    fallbacks. Surfaced in the deadline errors so a wedged *task* is
+    named alongside its scenario (one sweep can interleave many tasks;
+    "scenario ('sogouq', 600) timed out" alone does not say WHICH task
+    wedged)."""
+    for attr in ("task_name", "name", "__name__"):
+        label = getattr(consumer, attr, None)
+        if isinstance(label, str) and label:
+            return label
+    return None
+
+
+def _deadline_error(deadline_s, key, consumer) -> TimeoutError:
+    """The wedged-consumer TimeoutError, naming scenario AND task."""
+    task = consumer_label(consumer)
+    tag = f" running task {task!r}" if task else ""
+    return TimeoutError(
+        f"consumer deadline ({deadline_s}s) exceeded for {key!r}{tag}")
+
+
 def _replay_solo(key, sim: Stream, consumer, queue_size: int,
                  deadline_s: Optional[float], faults) -> Dict:
     """One scenario's retry replay (the resilience layer's unit of work):
@@ -690,8 +712,7 @@ def _replay_solo(key, sim: Stream, consumer, queue_size: int,
     if tc.is_alive():
         queue.close()              # unblock a get()-parked consumer; the
         tc.join(5.0)               # producer sheds via the closed queue
-        raise TimeoutError(
-            f"consumer deadline ({deadline_s}s) exceeded for {key!r}")
+        raise _deadline_error(deadline_s, key, consumer)
     tp.join()
     if "error" in box:
         raise box["error"]
@@ -795,9 +816,8 @@ def replay_many(sims: Dict, consumer, queue_size: int, *,
         if q.qsize() > 0 or q.closed:
             # wedged: buckets available (or stream over) yet not
             # finishing — shed it so the walk and its siblings complete
-            errors[key] = TimeoutError(
-                f"consumer deadline ({consumer_deadline_s}s) exceeded "
-                f"for {key!r}")
+            errors[key] = _deadline_error(consumer_deadline_s, key,
+                                          wrapped[key])
             q.close()
     prod_th.join()
     # post-shed grace: starved consumers (empty queue behind the wedged
@@ -810,9 +830,8 @@ def replay_many(sims: Dict, consumer, queue_size: int, *,
         if th.is_alive():
             th.join(grace.remaining())
         if th.is_alive():
-            errors[key] = TimeoutError(
-                f"consumer deadline ({consumer_deadline_s}s) exceeded "
-                f"for {key!r}")
+            errors[key] = _deadline_error(consumer_deadline_s, key,
+                                          wrapped[key])
             group[key].close()
     t_prod = time.perf_counter() - t0
 

@@ -259,6 +259,12 @@ class _CrashingConsumer:
     def __init__(self, injector: FaultInjector, consumer: Callable):
         self._injector = injector
         self._consumer = consumer
+        # advertise the wrapped task's name (see engine.consumer_label)
+        # so deadline errors name the task even through the crash wrapper
+        label = getattr(consumer, "name", None) \
+            or getattr(consumer, "__name__", None)
+        if isinstance(label, str) and label:
+            self.name = label
 
     def __call__(self, queue):
         attempt = self._injector.next_attempt()

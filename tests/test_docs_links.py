@@ -43,5 +43,5 @@ def test_intra_repo_link_resolves(page, target):
 
 def test_docs_pages_exist():
     for name in ("architecture.md", "kernels.md", "benchmarks.md",
-                 "backends.md", "robustness.md"):
+                 "backends.md", "robustness.md", "tasks.md"):
         assert (REPO / "docs" / name).is_file(), f"docs/{name} missing"

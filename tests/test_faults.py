@@ -36,6 +36,7 @@ from repro.streamsim import (
     CircuitBreaker,
     Controller,
     Deadline,
+    EventDetectTask,
     FaultPlan,
     FaultSpec,
     MultiQueueProducer,
@@ -646,3 +647,94 @@ class TestControllerResilience:
         for r in reports:
             assert r.status == "ok" and r.attempts == 1
             assert _reconciles(r.consumer_metrics)
+
+
+# ----------------------------------------------------- stream-task chaos tier
+class TestTaskChaosIntegration:
+    """The task tier meets the chaos layer: :class:`EventDetectTask` run
+    through ``replay_many`` under a non-noop :class:`FaultPlan` must (a)
+    satisfy the delivery reconciliation identity ``buckets_in ==
+    emitted - dropped + duplicated`` per scenario, and (b) keep its
+    detections displaced by at most the reorder window under a loss-free
+    bounded reorder — exactly zero displacement once the watermark buffer
+    (``reorder_tolerance``) is sized to that window."""
+
+    REORDER = FaultSpec(reorder_rate=1.0, reorder_window=4)
+
+    @staticmethod
+    def _detect_sims():
+        # CUSUM needs bucket-count variation to alarm at all; the sliced
+        # sogouq morning ramp gives it (traffic at tiny scale compresses
+        # to a flat one-record-per-bucket series).
+        if not hasattr(TestTaskChaosIntegration, "_cache"):
+            from repro.streamsim import slice_stream
+            s = slice_stream(
+                preprocess(make_stream("sogouq", scale=0.3, seed=0)), 7200)
+            TestTaskChaosIntegration._cache = {("sogouq", 100): nsa(s, 100)}
+        return TestTaskChaosIntegration._cache
+
+    @pytest.mark.timeout(120)
+    def test_detect_reconciles_under_full_chaos(self):
+        sims = _sims((40, 60))
+        task = EventDetectTask(mode="threshold", threshold=2.0)
+        metrics, _ = engine.replay_many(
+            sims, task, 64, fault_plan=FaultPlan(11, default=CHAOS))
+        for key, m in metrics.items():
+            assert _reconciles(m), f"{key} does not reconcile: {m}"
+            assert m["task"] == "event-detect"
+            # every delivered bucket reached the task
+            assert m["task_buckets"] == m["buckets_in"]
+
+    @pytest.mark.timeout(120)
+    def test_threshold_event_set_survives_bounded_reorder(self):
+        # threshold events carry the triggering bucket's OWN stamp, so a
+        # loss-free reorder leaves the event SET identical (stamp
+        # displacement zero <= window) even with no watermark buffer.
+        sims = _sims((60,))
+        key = ("traffic", 60)
+        base, _ = engine.replay_many(
+            sims, EventDetectTask(mode="threshold", threshold=2.0), 64)
+        chaos, _ = engine.replay_many(
+            sims, EventDetectTask(mode="threshold", threshold=2.0), 64,
+            fault_plan=FaultPlan(3, default=self.REORDER))
+        assert chaos[key]["fault_reordered"] > 0
+        assert _reconciles(chaos[key])
+        assert sorted(chaos[key]["task_events"].tolist()) == \
+            sorted(base[key]["task_events"].tolist())
+
+    @pytest.mark.timeout(120)
+    def test_cusum_displacement_bounded_by_reorder_window(self):
+        # CUSUM is order-sensitive; with the watermark buffer sized to
+        # the fault plan's reorder window the faulted event list is
+        # bit-equal to the unfaulted one (displacement bound met at 0).
+        sims = self._detect_sims()
+        key = ("sogouq", 100)
+        w = self.REORDER.reorder_window
+        kw = dict(mode="cusum", drift=0.5, h=2.0, reorder_tolerance=w)
+        base, _ = engine.replay_many(sims, EventDetectTask(**kw), 64)
+        chaos, _ = engine.replay_many(
+            sims, EventDetectTask(**kw), 64,
+            fault_plan=FaultPlan(3, default=self.REORDER))
+        assert chaos[key]["fault_reordered"] > 0
+        assert base[key]["detect_events"] > 0   # non-vacuous comparison
+        assert chaos[key]["task_events"].tolist() == \
+            base[key]["task_events"].tolist()
+
+    @pytest.mark.timeout(120)
+    def test_cusum_without_watermark_stays_within_window(self):
+        # even with NO watermark buffer, every faulted detection sits
+        # within the reorder window of some unfaulted detection: the
+        # bounded-displacement half of the acceptance gate.
+        sims = self._detect_sims()
+        key = ("sogouq", 100)
+        w = self.REORDER.reorder_window
+        kw = dict(mode="cusum", drift=0.5, h=2.0)
+        base, _ = engine.replay_many(sims, EventDetectTask(**kw), 64)
+        chaos, _ = engine.replay_many(
+            sims, EventDetectTask(**kw), 64,
+            fault_plan=FaultPlan(3, default=self.REORDER))
+        ref = base[key]["task_events"]
+        assert len(ref) > 0
+        for stamp in chaos[key]["task_events"]:
+            assert np.abs(ref - stamp).min() <= w, \
+                f"event at {stamp} displaced beyond window {w}: {ref}"

@@ -1,0 +1,538 @@
+"""Stream-task tier: determinism + paper-claim equivalence suite.
+
+The task tier (repro.streamsim.tasks / taskbench) is the SPS side of the
+paper's headline claim: simulated replay accelerates a stream task while
+the task's own output keeps the original's volatility and trends. These
+tests pin:
+
+- task semantics (ETL cleaning, windowed aggregates, threshold/CUSUM
+  detection, the watermark reorder buffer) against hand oracles;
+- determinism: identical seeds -> bit-identical task output over
+  VirtualClock replay (latency bins are wall-time and explicitly exempt);
+- equivalence: simulated-vs-original task output trend correlation >= the
+  documented FIDELITY_FLOOR, and simulated replay faster for every task;
+- the device latency-histogram path (one fused dispatch per sweep);
+- engine integration: tasks as Controller.run_many consumers (monolithic
+  and chunked), QueueGroup drain order, and the wedged-task deadline
+  error naming the task, not just the scenario.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.streamsim import (
+    Controller,
+    ETLTask,
+    EventDetectTask,
+    Producer,
+    StreamQueue,
+    VirtualClock,
+    WindowedStatsTask,
+    consumer_label,
+    make_stream,
+    nsa,
+    preprocess,
+)
+from repro.streamsim.engine import replay_many
+from repro.streamsim.queue import Bucket
+from repro.streamsim.taskbench import (
+    FIDELITY_FLOOR,
+    TaskBenchRunner,
+    original_replay_stream,
+    slice_stream,
+    summarize_latencies,
+)
+from repro.streamsim.tasks import output_series
+
+
+def bucket(stamp, count, value=1.0):
+    return Bucket(scale_stamp=stamp, t=np.full(count, float(stamp)),
+                  payload={"v": np.full(count, value)}, emit_time=0.0)
+
+
+def feed(buckets, maxsize=None):
+    """A closed queue preloaded with the given buckets."""
+    q = StreamQueue(maxsize=maxsize or max(len(buckets), 1))
+    for b in buckets:
+        q.put(b)
+    q.close()
+    return q
+
+
+@pytest.fixture(scope="module")
+def source():
+    """A 2-hour slice of sogouq at a realistic rate plus its simulation."""
+    orig = slice_stream(preprocess(make_stream("sogouq", scale=0.3, seed=0)),
+                        7200)
+    return orig, nsa(orig, 100)
+
+
+@pytest.fixture(scope="module")
+def bench_reports(source):
+    """One TaskBenchRunner pass shared by the equivalence assertions."""
+    runner = TaskBenchRunner(["sogouq"], [100], scale=0.3, seed=0,
+                             span_s=7200, backend="numpy")
+    tasks = [ETLTask(), WindowedStatsTask(window_s=30),
+             EventDetectTask(mode="threshold", threshold=4.0)]
+    return {r.task: r for r in runner.run(tasks)}
+
+
+# ------------------------------------------------------------ output series
+class TestOutputSeries:
+    def test_accumulates_duplicate_stamps(self):
+        out = output_series([2, 0, 2], [3, 1, 4])
+        assert out.tolist() == [1, 0, 7]
+
+    def test_empty(self):
+        assert len(output_series([], [])) == 0
+
+    def test_negative_stamp_raises(self):
+        with pytest.raises(ValueError):
+            output_series([-1], [1])
+
+
+# ----------------------------------------------------------------- ETL task
+class TestETLTask:
+    def test_all_clean_without_bounds(self):
+        m = ETLTask()(feed([bucket(0, 3), bucket(2, 2)]))
+        assert m["etl_clean"] == 5 and m["etl_dirty"] == 0
+        assert m["task_output_counts"].tolist() == [3, 0, 2]
+
+    def test_bounds_filter_drops(self):
+        q = feed([bucket(0, 4, value=10.0), bucket(1, 2, value=1.0)])
+        m = ETLTask(bounds={"v": (0.0, 5.0)})(q)
+        assert m["etl_clean"] == 2 and m["etl_dirty"] == 4
+        assert m["task_output_counts"].tolist() == [0, 2]
+
+    def test_nonfinite_records_dropped(self):
+        b = bucket(0, 3)
+        b.payload["v"][1] = np.nan
+        m = ETLTask()(feed([b]))
+        assert m["etl_clean"] == 2 and m["etl_dirty"] == 1
+
+    def test_checksum_deterministic(self, source):
+        _, sim = source
+        runs = [replay_many({("s", 100): sim}, ETLTask(), 64)[0][("s", 100)]
+                for _ in range(2)]
+        assert runs[0]["etl_checksum"] == runs[1]["etl_checksum"]
+
+    def test_common_metric_keys(self):
+        m = ETLTask()(feed([bucket(0, 1)]))
+        for key in ("task", "task_buckets", "task_records", "task_wall_s",
+                    "task_throughput_rps", "task_latency_bins",
+                    "task_output_counts"):
+            assert key in m
+        assert m["task"] == "etl"
+        assert m["task_latency_bins"].dtype == np.int32
+
+
+# --------------------------------------------------------------- STATS task
+class TestWindowedStatsTask:
+    def test_sliding_matches_convolve_oracle(self):
+        rng = np.random.default_rng(0)
+        q = rng.integers(0, 20, 257).astype(np.float64)
+        task = WindowedStatsTask(window_s=16)
+        oracle = np.convolve(q, np.ones(16) / 16, mode="same")
+        np.testing.assert_allclose(task.aggregate(q), oracle, atol=1e-9)
+
+    def test_tumbling_partial_window_uses_true_length(self):
+        task = WindowedStatsTask(window_s=4, mode="tumbling")
+        agg = task.aggregate(np.array([2.0, 2, 2, 2, 6, 6]))
+        assert agg.tolist() == [2.0, 6.0]   # trailing pair means over 2
+
+    def test_window_clamped_to_series(self):
+        """A window wider than the series clamps to its length and keeps
+        the convolve mode=\"same\" zero-padded-edge convention."""
+        task = WindowedStatsTask(window_s=100)
+        agg = task.aggregate(np.array([1.0, 3.0]))
+        oracle = np.convolve([1.0, 3.0], np.ones(2) / 2, mode="same")
+        np.testing.assert_allclose(agg, oracle)
+
+    def test_bad_mode_and_window_raise(self):
+        with pytest.raises(ValueError):
+            WindowedStatsTask(mode="hopping")
+        with pytest.raises(ValueError):
+            WindowedStatsTask(window_s=0)
+
+    def test_consumer_metrics_carry_aggregate(self):
+        m = WindowedStatsTask(window_s=2)(feed([bucket(0, 2), bucket(1, 4)]))
+        assert m["stats_mode"] == "sliding"
+        assert m["stats_peak"] >= m["stats_mean"] > 0
+        assert len(m["stats_aggregate"]) == 2
+
+
+# ----------------------------------------------------------- detection task
+class TestEventDetectTask:
+    def test_threshold_event_stamps_exact(self):
+        task = EventDetectTask(mode="threshold", threshold=2.5)
+        m = task(feed([bucket(0, 1), bucket(1, 3), bucket(2, 2),
+                       bucket(3, 5)]))
+        assert m["task_events"].tolist() == [1, 3]
+        assert m["detect_events"] == 2
+
+    def test_threshold_requires_threshold(self):
+        with pytest.raises(ValueError):
+            EventDetectTask(mode="threshold")
+
+    def test_bad_mode_raises(self):
+        with pytest.raises(ValueError):
+            EventDetectTask(mode="zscore", threshold=1.0)
+
+    def test_cusum_fires_on_burst(self):
+        quiet = [bucket(i, 2) for i in range(30)]
+        burst = [bucket(30 + i, 12) for i in range(10)]
+        m = EventDetectTask(mode="cusum", drift=0.5, h=5.0)(
+            feed(quiet + burst))
+        assert m["detect_events"] >= 1
+        assert m["task_events"].min() >= 30   # only inside the burst
+
+    def test_cusum_quiet_on_flat(self):
+        m = EventDetectTask(mode="cusum", drift=0.5, h=5.0)(
+            feed([bucket(i, 3) for i in range(50)]))
+        assert m["detect_events"] == 0
+
+    def test_watermark_restores_order(self):
+        """A w-displaced arrival order with tolerance w detects EXACTLY
+        like the in-order replay (the invariance the chaos layer leans
+        on)."""
+        rng = np.random.default_rng(3)
+        counts = rng.integers(0, 10, 120)
+        buckets = [bucket(i, int(c)) for i, c in enumerate(counts)]
+        w = 8
+        shuffled = []
+        for i in range(0, len(buckets), w):   # block shuffle: displacement < w
+            block = buckets[i:i + w]
+            rng.shuffle(block)
+            shuffled.extend(block)
+        kw = dict(mode="cusum", drift=0.5, h=4.0)
+        ordered = EventDetectTask(reorder_tolerance=w, **kw)(feed(buckets))
+        reordered = EventDetectTask(reorder_tolerance=w, **kw)(feed(shuffled))
+        assert ordered["task_events"].tolist() == \
+            reordered["task_events"].tolist()
+
+    def test_threshold_invariant_under_any_order(self):
+        buckets = [bucket(i, int(c)) for i, c in
+                   enumerate([1, 7, 2, 9, 0, 8, 3])]
+        task = EventDetectTask(mode="threshold", threshold=5.0)
+        a = task(feed(buckets))
+        b = task(feed(list(reversed(buckets))))
+        assert sorted(a["task_events"]) == sorted(b["task_events"])
+
+    def test_negative_tolerance_raises(self):
+        with pytest.raises(ValueError):
+            EventDetectTask(mode="cusum", reorder_tolerance=-1)
+
+
+# ------------------------------------------------------- latency histograms
+class TestLatencySummary:
+    def test_quantiles_match_nearest_rank(self):
+        rng = np.random.default_rng(1)
+        bins = rng.integers(0, 400, 5000).astype(np.int32)
+        s = summarize_latencies([bins], bin_us=5.0, backend="numpy")[0]
+        for p, got in ((0.50, s.p50_us), (0.99, s.p99_us),
+                       (0.999, s.p999_us)):
+            rank = int(np.ceil(p * len(bins)))
+            expect = (np.sort(bins)[rank - 1] + 0.5) * 5.0
+            assert got == pytest.approx(expect)
+
+    def test_mean_and_jitter_from_histogram(self):
+        bins = np.array([10, 10, 20, 20], np.int32)
+        s = summarize_latencies([bins], bin_us=2.0, backend="numpy")[0]
+        centers = (bins + 0.5) * 2.0
+        assert s.mean_us == pytest.approx(centers.mean())
+        assert s.jitter_us == pytest.approx(centers.std())
+
+    def test_constant_bins_zero_jitter(self):
+        s = summarize_latencies([np.full(64, 7, np.int32)],
+                                backend="numpy")[0]
+        assert s.jitter_us == pytest.approx(0.0)
+        assert s.p50_us == s.p999_us
+
+    def test_empty_scenario_is_nan(self):
+        s = summarize_latencies([np.zeros(0, np.int32)], backend="numpy")[0]
+        assert s.samples == 0 and np.isnan(s.p50_us)
+
+    def test_no_scenarios(self):
+        assert summarize_latencies([]) == []
+
+    def test_one_fused_dispatch_per_sweep(self, monkeypatch):
+        """S scenarios' latency bins must cost ONE stream_metrics_batched
+        call (the device histogram path), not S."""
+        from repro.kernels import ops
+        calls = []
+        real = ops.stream_metrics_batched
+
+        def counting(ss_seq, max_range):
+            calls.append(len(list(ss_seq)))
+            return real(ss_seq, max_range)
+
+        monkeypatch.setattr(ops, "stream_metrics_batched", counting)
+        rng = np.random.default_rng(2)
+        arrays = [rng.integers(0, 50, 100).astype(np.int32)
+                  for _ in range(5)]
+        out = summarize_latencies(arrays, n_bins=64, backend="auto")
+        assert calls == [5]
+        assert len(out) == 5 and all(o.samples == 100 for o in out)
+
+    def test_device_path_matches_numpy(self):
+        rng = np.random.default_rng(4)
+        arrays = [rng.integers(0, 30, n).astype(np.int32)
+                  for n in (0, 17, 256)]
+        a = summarize_latencies(arrays, n_bins=32, backend="auto")
+        b = summarize_latencies(arrays, n_bins=32, backend="numpy")
+        for x, y in zip(a, b):
+            assert x.samples == y.samples
+            if x.samples:
+                assert x.to_dict() == pytest.approx(y.to_dict())
+
+
+# ------------------------------------------------- determinism + equivalence
+class TestDeterminismAndEquivalence:
+    def test_identical_seeds_identical_output(self):
+        """Two independent end-to-end pipelines from the same seed agree
+        bit-for-bit on every deterministic task output."""
+        runs = []
+        for _ in range(2):
+            orig = slice_stream(
+                preprocess(make_stream("sogouq", scale=0.2, seed=7)), 3600)
+            sim = nsa(orig, 60)
+            m, _ = replay_many({("sogouq", 60): sim}, ETLTask(), 64)
+            runs.append(m[("sogouq", 60)])
+        a, b = runs
+        np.testing.assert_array_equal(a["task_output_counts"],
+                                      b["task_output_counts"])
+        assert a["etl_checksum"] == b["etl_checksum"]
+        assert a["task_records"] == b["task_records"]
+
+    def test_different_seed_differs(self):
+        outs = []
+        for seed in (0, 1):
+            orig = slice_stream(
+                preprocess(make_stream("sogouq", scale=0.2, seed=seed)),
+                3600)
+            m, _ = replay_many({("s", 0): nsa(orig, 60)}, ETLTask(), 64)
+            outs.append(m[("s", 0)]["task_output_counts"])
+        assert not np.array_equal(*outs)
+
+    def test_replay_matches_direct_feed(self, source):
+        """The engine transport adds nothing: replaying through
+        replay_many equals feeding the same buckets straight in."""
+        _, sim = source
+        task = EventDetectTask(mode="threshold", threshold=4.0)
+        via_engine, _ = replay_many({("s", 100): sim}, task, 64)
+        q = StreamQueue(maxsize=256)
+        th = threading.Thread(
+            target=Producer(sim, q, clock=VirtualClock()).run, daemon=True)
+        th.start()
+        direct = task(q)
+        th.join()
+        np.testing.assert_array_equal(
+            via_engine[("s", 100)]["task_output_counts"],
+            direct["task_output_counts"])
+        np.testing.assert_array_equal(
+            via_engine[("s", 100)]["task_events"], direct["task_events"])
+
+    @pytest.mark.parametrize("task_name", ["etl", "windowed-stats",
+                                           "event-detect"])
+    def test_fidelity_above_documented_floor(self, bench_reports, task_name):
+        rep = bench_reports[task_name]
+        assert rep.trend_fidelity >= FIDELITY_FLOOR, (
+            f"{task_name}: simulated-replay output trend diverged "
+            f"({rep.trend_fidelity:.3f} < floor {FIDELITY_FLOOR})")
+
+    @pytest.mark.parametrize("task_name", ["etl", "windowed-stats",
+                                           "event-detect"])
+    def test_simulated_replay_accelerates(self, bench_reports, task_name):
+        rep = bench_reports[task_name]
+        assert rep.speedup > 1.0
+        assert rep.t_simulated_s < rep.t_original_s
+
+    def test_volatility_digest_present(self, bench_reports):
+        rep = bench_reports["etl"]
+        assert rep.cv_original > 0 and rep.cv_simulated > 0
+
+    def test_report_to_dict(self, bench_reports):
+        d = bench_reports["etl"].to_dict()
+        for key in ("task", "dataset", "max_range", "speedup",
+                    "paper_ratio", "trend_fidelity", "latency"):
+            assert key in d
+        assert d["paper_ratio"] == 24.0
+        assert d["latency"]["samples"] > 0
+
+    def test_original_replay_stream_stamps(self, source):
+        orig, _ = source
+        stamped = original_replay_stream(orig)
+        assert stamped.scale_stamp.min() == 0
+        assert stamped.scale_stamp.max() <= 7200
+        assert len(stamped.scale_stamp) == len(orig.t)
+
+    def test_runner_validates_inputs(self):
+        with pytest.raises(ValueError):
+            TaskBenchRunner([], [100])
+        with pytest.raises(ValueError):
+            slice_stream(preprocess(make_stream("sogouq", scale=0.01,
+                                                seed=0)), 0)
+
+
+# -------------------------------------------------------- engine integration
+class TestEngineIntegration:
+    def test_task_through_controller_run_many(self, tmp_path):
+        ctrl = Controller(tmp_path / "store")
+        reports = ctrl.run_many(["sogouq"], [60, 120], ETLTask(),
+                                scale=0.02, seed=3, backend="numpy")
+        assert len(reports) == 2
+        for r in reports:
+            cm = r.consumer_metrics
+            assert cm["task"] == "etl"
+            assert cm["etl_clean"] == cm["task_records"]
+            assert len(cm["task_output_counts"]) <= r.max_range
+
+    def test_task_through_chunked_path(self, tmp_path):
+        """Tasks consume the PR 7 chunked pipeline unchanged, and the
+        chunked replay feeds the same buckets as the monolithic one."""
+        a = Controller(tmp_path / "a").run_many(
+            ["sogouq"], [60], EventDetectTask(mode="threshold",
+                                              threshold=3.0),
+            scale=0.02, seed=3, backend="numpy", chunk_s=17)
+        b = Controller(tmp_path / "b").run_many(
+            ["sogouq"], [60], EventDetectTask(mode="threshold",
+                                              threshold=3.0),
+            scale=0.02, seed=3, backend="numpy")
+        ca, cb = a[0].consumer_metrics, b[0].consumer_metrics
+        np.testing.assert_array_equal(ca["task_output_counts"],
+                                      cb["task_output_counts"])
+        np.testing.assert_array_equal(ca["task_events"], cb["task_events"])
+
+    def test_queuegroup_drain_order(self, source):
+        """Drain-order regression: each scenario's queue must deliver its
+        buckets in the producer's stamp order even with sibling scenarios
+        interleaved in one merged walk."""
+        _, sim = source
+        sims = {("sogouq", 100): sim, ("sogouq-b", 100): sim}
+
+        class OrderProbe(ETLTask):
+            name = "order-probe"
+
+            def _start(self):
+                state = super()._start()
+                state["order"] = []
+                return state
+
+            def _process(self, state, bucket):
+                state["order"].append(int(bucket.scale_stamp))
+                return super()._process(state, bucket)
+
+            def _finalize(self, state, out):
+                return {**super()._finalize(state, out),
+                        "order": list(state["order"])}
+
+        metrics, _ = replay_many(sims, OrderProbe(), 16)
+        expect = sorted(np.unique(sim.scale_stamp).tolist())
+        for key, m in metrics.items():
+            assert m["order"] == expect, f"{key} drained out of order"
+
+    def test_wedged_deadline_names_task(self, source):
+        """Satellite fix: the consumer_deadline_s classification must name
+        the wedged TASK, not just its scenario."""
+        _, sim = source
+
+        class WedgedTask:
+            name = "wedge-probe"
+
+            def __call__(self, queue):
+                for _ in queue:
+                    import time
+                    time.sleep(3600)
+                return {}
+
+        with pytest.raises(RuntimeError) as exc_info:
+            replay_many({("sogouq", 100): sim}, WedgedTask(), 16,
+                        consumer_deadline_s=0.3)
+        msg = str(exc_info.value)
+        assert "wedge-probe" in msg
+        assert "('sogouq', 100)" in msg
+        cause = exc_info.value.__cause__
+        assert isinstance(cause, TimeoutError)
+        assert "running task 'wedge-probe'" in str(cause)
+
+    def test_wedged_deadline_names_plain_function(self, source):
+        _, sim = source
+
+        def slowpoke(queue):
+            import time
+            for _ in queue:
+                time.sleep(3600)
+            return {}
+
+        with pytest.raises(RuntimeError) as exc_info:
+            replay_many({("sogouq", 100): sim}, slowpoke, 16,
+                        consumer_deadline_s=0.3)
+        assert "slowpoke" in str(exc_info.value)
+
+    def test_consumer_label(self):
+        assert consumer_label(ETLTask()) == "etl"
+
+        def plain(queue):
+            return {}
+
+        assert consumer_label(plain) == "plain"
+
+        class Named:
+            task_name = "custom"
+
+        assert consumer_label(Named()) == "custom"
+        assert consumer_label(object()) is None
+
+
+# --------------------------------------------------------------- serving task
+class TestServingTask:
+    @pytest.fixture(scope="class")
+    def engine_setup(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs.paper_stream import consumer_lm
+        from repro.models import transformer as T
+        cfg = consumer_lm().replace(n_layers=2, d_model=64, n_heads=4,
+                                    n_kv_heads=2, head_dim=16, d_ff=128,
+                                    vocab_size=512, loss_chunk=16)
+        return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def test_serving_smoke_on_cpu(self, engine_setup):
+        """ServingTask drains a simulated replay on the CPU backend:
+        every admitted request finishes and the latency digest is sane."""
+        from repro.streamsim import ServingTask
+        cfg, params = engine_setup
+        orig = preprocess(make_stream("sogouq", scale=0.005, seed=4))
+        sim = nsa(orig, 30)
+        task = ServingTask(cfg, params, slots=4, max_len=48, prompt_len=4,
+                           max_new_tokens=3, max_requests_per_bucket=2)
+        metrics, _ = replay_many({("sogouq", 30): sim}, task, 64)
+        m = metrics[("sogouq", 30)]
+        assert m["task"] == "serving"
+        assert m["task_records"] > 5
+        assert m["serving_finished"] == m["task_records"]
+        assert len(m["task_latency_bins"]) == m["task_records"]
+        # regression: arrivals must be restamped onto the engine's wall
+        # clock — the virtual emit_time stamp puts EVERY latency in the
+        # overflow bin (latency ~= process uptime)
+        assert m["task_latency_bins"].max() < task.n_bins - 1
+        s = summarize_latencies([m["task_latency_bins"]],
+                                bin_us=task.bin_us, n_bins=task.n_bins,
+                                backend="numpy")[0]
+        assert s.p50_us > 0 and s.p999_us >= s.p99_us >= s.p50_us
+
+    def test_reuse_engine_resets_state(self, engine_setup):
+        from repro.streamsim import ServingTask
+        cfg, params = engine_setup
+        orig = preprocess(make_stream("sogouq", scale=0.003, seed=5))
+        sim = nsa(orig, 20)
+        task = ServingTask(cfg, params, slots=2, max_len=48, prompt_len=4,
+                           max_new_tokens=2, max_requests_per_bucket=1,
+                           reuse_engine=True)
+        runs = [replay_many({("s", 20): sim}, task, 64)[0][("s", 20)]
+                for _ in range(2)]
+        assert runs[0]["task_records"] == runs[1]["task_records"]
+        assert runs[0]["serving_finished"] == runs[1]["serving_finished"]
+        np.testing.assert_array_equal(runs[0]["task_output_counts"],
+                                      runs[1]["task_output_counts"])
