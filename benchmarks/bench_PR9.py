@@ -1,0 +1,222 @@
+"""PR 9 trajectory rows: sweep-service failover recovery + service overhead.
+
+Two rows quantify what the lease-based sweep service costs (marker I/O,
+when nothing dies) and buys (skipped work, when a worker does die):
+
+- ``service_failover_recovery`` — a 3-dataset × 4-time-range sweep (12
+  scenarios) whose service namespace already carries the state a
+  kill-one-of-two-workers crash leaves behind: 8 scenarios' results
+  published, ONE scenario held by an expired lease (the dead worker's),
+  3 still queued. NEW: a surviving participant reaps the dead lease,
+  requeues it, executes only the 4 outstanding scenarios, and merges.
+  OLD (the path it replaces): the same sweep restarted from zero — all
+  12 scenarios re-replayed. Recovery does a strict subset of the
+  restart's replay/report work plus O(grid) marker I/O, so the row is
+  gated ≤ 1.0× by ``check_regression.py``. Rebuilding the crash scene
+  between reps is test scaffolding, not recovery work, and stays
+  outside the timed region.
+
+- ``service_overhead`` — the full 12-scenario sweep through
+  ``run_many(service=True)`` with ``lease_batch`` covering the whole
+  grid (one election, one claim pass, one engine run — the direct-like
+  shape) vs the direct ``run_many`` path. The delta is pure service
+  machinery: the publisher election, queue/lease/result/fidelity marker
+  round-trips, the heartbeat thread, and the count-row merge. Gated
+  ≤ 1.15× — the service must stay a thin coat of paint on the engine,
+  not a second engine.
+
+Both rows run at reduced scale off-TPU and carry the usual ``@`` suffix
+so trend tooling never mixes incommensurable sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import List
+
+from repro.kernels import ops
+from repro.streamsim.controller import Controller
+from repro.streamsim.resilience import Lease
+from repro.streamsim.service import SweepService, scenario_marker
+
+DATASETS = ("sogouq", "traffic", "userbehavior")
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _tmin(fn, reps=3):
+    """(result, min-of-reps seconds) — min is robust to scheduler noise."""
+    out, best = fn(), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn()
+        best = min(best, time.perf_counter() - t0)
+        assert r == out, "non-deterministic benchmark result"
+    return out, best
+
+
+def _tmin_pair(fn_a, fn_b, reps=3):
+    """((result_a, min_a), (result_b, min_b)) with a/b timed alternately
+    rep by rep — drifting machine load hits both legs equally instead of
+    landing entirely on whichever leg happened to run in the slow window.
+    For ratio-gated rows this is what keeps the comparison fair."""
+    out_a, out_b = fn_a(), fn_b()
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        assert r == out_a, "non-deterministic benchmark result"
+        t0 = time.perf_counter()
+        r = fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+        assert r == out_b, "non-deterministic benchmark result"
+    return (out_a, best_a), (out_b, best_b)
+
+
+def _tmin_staged(setup, fn, reps=3):
+    """_tmin with an untimed setup() before every timed fn(state) — keeps
+    scaffolding that rebuilds the measured path's precondition (e.g. the
+    crash-scene markers) out of the measurement."""
+    out, best = fn(setup()), float("inf")
+    for _ in range(reps):
+        state = setup()
+        t0 = time.perf_counter()
+        r = fn(state)
+        best = min(best, time.perf_counter() - t0)
+        assert r == out, "non-deterministic benchmark result"
+    return out, best
+
+
+def _consumer(queue):
+    return {"records_seen": sum(len(b) for b in queue)}
+
+
+def run(csv: List[str]) -> None:
+    if ops.on_tpu():
+        scale, tag = 0.05, ""
+    else:
+        scale = 0.002 if QUICK else 0.004
+        tag = f"@scale{scale}"
+    ranges = (15, 30, 45, 60)
+    datasets = list(DATASETS)
+    reps = 2 if QUICK else 4
+    seed = 9
+    k = 8                    # results published before the worker died
+    grid = [(d, mr) for d in datasets for mr in ranges]
+
+    tmp = tempfile.mkdtemp(prefix="bench_pr9_")
+    try:
+        ctrl = Controller(os.path.join(tmp, "store"))
+        store = ctrl.store
+        originals = {d: ctrl.prepare(d, scale=scale, seed=seed)
+                     for d in datasets}
+
+        # seed run: warms the NSA cache (every timed path below sees
+        # identical cache hits) and yields the result/fidelity marker
+        # payloads a killed run would have published before dying
+        seed_svc = SweepService(store, datasets, ranges, scale=scale,
+                                seed=seed, lease_ttl_s=120.0,
+                                poll_s=0.01, lease_batch=len(grid),
+                                worker_id="seed-run")
+        seed_svc.work(originals, _consumer)
+        results = {n: store.get_marker(seed_svc.ns_results, n)
+                   for n in store.list_markers(seed_svc.ns_results)}
+        fid_rows = {n: store.get_marker(seed_svc.ns_fidelity, n)
+                    for n in store.list_markers(seed_svc.ns_fidelity)}
+        store.clear_markers(seed_svc.group)
+        names = [scenario_marker(d, mr) for d, mr in grid]
+
+        def _svc(worker):
+            return SweepService(store, datasets, ranges, scale=scale,
+                                seed=seed, lease_ttl_s=120.0, poll_s=0.01,
+                                lease_batch=len(grid), worker_id=worker)
+
+        # --- recover-from-kill vs restart-from-zero ----------------------
+        def _crash_scene():
+            # recreate the killed 2-worker sweep's marker state (the
+            # finalize step clears the namespace, so each rep starts
+            # from the identical crash scene); untimed — on a real
+            # failover the scene already exists on disk
+            svc = _svc("survivor")
+            svc.publish_queue()
+            for n in names[:k]:
+                store.remove_marker(svc.ns_queue, n)
+                store.put_marker(svc.ns_results, n, results[n])
+            for n, payload in fid_rows.items():
+                if n.startswith("orig__") or \
+                        n.split("sim__", 1)[-1] in names[:k]:
+                    store.put_marker(svc.ns_fidelity, n, payload)
+            dead_name, (dd, dmr) = names[k], grid[k]
+            store.claim_marker(svc.ns_queue, dead_name,
+                               svc.ns_leases, dead_name)
+            store.put_marker(svc.ns_leases, dead_name, Lease(
+                worker="killed-worker", dataset=dd, max_range=dmr,
+                ttl_s=1.0, deadline=time.time() - 1.0,
+                attempts=1).to_json())
+            return svc
+
+        def _recover(svc):
+            svc.work(originals, _consumer)
+            reports, fidelity, _ = svc.finalize()
+            assert len(fidelity) == len(ranges)
+            return sum(r.consumer_metrics["records_seen"]
+                       for r in reports)
+
+        def _restart_from_zero():
+            svc = _svc("restarter")
+            svc.work(originals, _consumer)
+            reports, fidelity, _ = svc.finalize()
+            assert len(fidelity) == len(ranges)
+            return sum(r.consumer_metrics["records_seen"]
+                       for r in reports)
+
+        got_new, dt_new = _tmin_staged(_crash_scene, _recover, reps=reps)
+        got_old, dt_old = _tmin(_restart_from_zero, reps=reps)
+        assert got_new == got_old, "recovered and restarted sweeps must " \
+            f"deliver identical record totals ({got_new} vs {got_old})"
+        csv.append(
+            f"PR9/service_failover_recovery{tag},{dt_new*1e6:.0f},"
+            f"scenarios={len(grid)};recovered_from={k};"
+            f"restart_from_zero_us={dt_old*1e6:.0f};"
+            f"speedup={dt_old/max(dt_new, 1e-9):.1f}x")
+
+        # --- service machinery vs direct run_many ------------------------
+        # the service's fixed cost is O(grid) marker round-trips, so this
+        # row runs at a scale where the sweep itself is the dominant term
+        # (the regime services exist for); a fresh store keeps the larger
+        # originals out of the failover row's cache
+        o_scale = scale if ops.on_tpu() else 0.5
+        o_tag = "" if ops.on_tpu() else f"@scale{o_scale}"
+        ctrl2 = Controller(os.path.join(tmp, "store_overhead"))
+        for d in datasets:
+            ctrl2.prepare(d, scale=o_scale, seed=seed)
+
+        def _service_mode():
+            out = ctrl2.run_many(datasets, ranges, _consumer,
+                                 scale=o_scale, seed=seed, service=True,
+                                 lease_ttl_s=120.0, service_poll_s=0.01,
+                                 lease_batch=len(grid))
+            return sum(r.consumer_metrics["records_seen"] for r in out)
+
+        def _direct():
+            out = ctrl2.run_many(datasets, ranges, _consumer,
+                                 scale=o_scale, seed=seed)
+            return sum(r.consumer_metrics["records_seen"] for r in out)
+
+        # gate margin is ~8%, so: a few extra reps even in quick mode AND
+        # the two legs timed alternately — one cold rep or one slow window
+        # must not decide the row
+        oreps = max(reps, 4)
+        (got_svc, dt_svc), (got_dir, dt_dir) = _tmin_pair(
+            _service_mode, _direct, reps=oreps)
+        assert got_svc == got_dir, "service and direct sweeps must " \
+            f"deliver identical record totals ({got_svc} vs {got_dir})"
+        csv.append(
+            f"PR9/service_overhead{o_tag},{dt_svc*1e6:.0f},"
+            f"scenarios={len(grid)};direct_run_many_us={dt_dir*1e6:.0f};"
+            f"overhead={dt_svc/max(dt_dir, 1e-9):.2f}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

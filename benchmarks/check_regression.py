@@ -39,6 +39,16 @@ replaced path" and ``1 / 1.2`` means "at least 1.2x faster".
 - ``PR8/task_serving`` vs ``original_replay_us`` at ratio ``1/2`` — the
   warm-engine serving load test must be at least 2x faster under the
   simulated arrival mix.
+- ``PR9/service_failover_recovery`` vs ``restart_from_zero_us`` — a
+  surviving sweep-service worker recovering a killed peer's sweep (8 of
+  12 results already published, one expired lease reaped + requeued)
+  must beat restarting the whole sweep from zero (guards the reap/claim
+  marker overhead and any accidental re-execution of published
+  scenarios).
+- ``PR9/service_overhead`` vs ``direct_run_many_us`` at ratio ``1.15``
+  — the full service path (election, queue/lease/result markers,
+  heartbeat, count-row merge) must stay within 15% of the direct
+  ``run_many`` it wraps when nothing fails.
 
 Structural regressions (an accidental per-scenario dispatch loop, a
 padding blowup, a host round-trip creeping back in) show up as
@@ -72,6 +82,8 @@ GATES = {
     "PR8/task_windowed_stats": ("original_replay_us", 1 / 4),
     "PR8/task_event_detect": ("original_replay_us", 1 / 4),
     "PR8/task_serving": ("original_replay_us", 1 / 2),
+    "PR9/service_failover_recovery": ("restart_from_zero_us", 1.0),
+    "PR9/service_overhead": ("direct_run_many_us", 1.15),
 }
 
 
@@ -133,4 +145,4 @@ def check(paths) -> int:
 if __name__ == "__main__":
     sys.exit(check(sys.argv[1:] or ["BENCH_PR4.json", "BENCH_PR5.json",
                                     "BENCH_PR6.json", "BENCH_PR7.json",
-                                    "BENCH_PR8.json"]))
+                                    "BENCH_PR8.json", "BENCH_PR9.json"]))

@@ -53,6 +53,8 @@ from repro.streamsim.resilience import (  # noqa: F401
     BreakerOpen,
     CircuitBreaker,
     Deadline,
+    Heartbeat,
+    Lease,
     RetryPolicy,
     SweepCheckpoint,
 )
@@ -80,6 +82,13 @@ from repro.streamsim.engine import (  # noqa: F401
     run_sweep_chunked,
 )
 from repro.streamsim.controller import Controller  # noqa: F401
+from repro.streamsim.service import (  # noqa: F401
+    SweepService,
+    merge_fidelity,
+    pack_counts,
+    run_service_sweep,
+    unpack_counts,
+)
 from repro.streamsim.tasks import (  # noqa: F401
     BucketTask,
     ETLTask,

@@ -209,7 +209,14 @@ class Controller:
                  retention_policy: str = "block",
                  checkpoint: bool = False,
                  chunk_s: int = 0,
-                 duration_s: int = 0) -> List[SimulationReport]:
+                 duration_s: int = 0,
+                 service: bool = False,
+                 lease_ttl_s: float = 60.0,
+                 service_poll_s: float = 0.2,
+                 lease_batch: int = 1,
+                 worker_id: Optional[str] = None,
+                 service_deadline_s: Optional[float] = None
+                 ) -> List[SimulationReport]:
         """The Tables 1-3 scenario sweep (datasets × time ranges), planned
         and executed by the sweep engine.
 
@@ -299,6 +306,27 @@ class Controller:
             (``ScenarioSpec.span_s``), preserving the per-day
             compression ratio. Requires ``chunk_s > 0`` (multi-day runs
             exist to be streamed, not held whole).
+        service : bool, default False
+            Run the sweep through the fault-tolerant lease-based sweep
+            service (:mod:`repro.streamsim.service`) instead of static
+            host partitioning: scenarios are published to a durable work
+            queue in the store, any number of participants (this process
+            plus every other ``run_many(service=True)`` pointed at the
+            same store and sweep config) lease, execute, and publish
+            them, expired leases of dead workers are requeued (and
+            quarantined as ``status="poisoned"`` after
+            ``breaker_threshold`` worker deaths on one scenario), and
+            EVERY participant returns the full grid's merged reports
+            plus the cross-host-merged full S×S fidelity matrix on
+            :attr:`last_fidelity`. Incompatible with ``chunk_s`` and
+            ``checkpoint`` (the service's queue IS the checkpoint).
+        lease_ttl_s, service_poll_s, lease_batch, worker_id,
+        service_deadline_s :
+            Service knobs: lease time-to-live (must comfortably exceed
+            one scenario batch's runtime — heartbeats renew it while the
+            worker lives), idle poll interval, scenarios leased per
+            claim, this participant's stable id (defaults to
+            host-pid-nonce), and an overall give-up deadline.
 
         Returns
         -------
@@ -329,6 +357,11 @@ class Controller:
                 "retry_policy/consumer_deadline_s are monolithic-replay "
                 "features; the chunked pipeline cannot rewind a "
                 "scenario's consumed chunks")
+        if service and (chunk_s or checkpoint):
+            raise ValueError(
+                "service mode is incompatible with chunk_s/checkpoint — "
+                "the service's durable work queue is its own checkpoint "
+                "and leases are scenario-granular")
         originals, t_pre = self._prepare_all(datasets, scale, seed,
                                              duration_s)
         if _resolve_backend(backend) == "numpy":
@@ -339,6 +372,21 @@ class Controller:
             host_index = 0 if host_index is None else host_index
             n_hosts = 1 if n_hosts is None else n_hosts
         row_counts = {d: len(originals[d]) for d in datasets}
+        if service:
+            return self._run_service(
+                datasets, max_ranges, originals, t_pre, consumer,
+                scale=scale, seed=seed, queue_size=queue_size,
+                backend=backend, fidelity_window_s=fidelity_window_s,
+                n_devices=n_devices, host_index=host_index,
+                n_hosts=n_hosts, fault_plan=fault_plan,
+                retry_policy=retry_policy,
+                breaker_threshold=breaker_threshold,
+                consumer_deadline_s=consumer_deadline_s,
+                on_failure=on_failure, max_bytes=max_bytes,
+                retention_policy=retention_policy,
+                lease_ttl_s=lease_ttl_s, service_poll_s=service_poll_s,
+                lease_batch=lease_batch, worker_id=worker_id,
+                service_deadline_s=service_deadline_s)
         plan = plan_sweep(self.store, datasets, max_ranges, row_counts,
                           scale=scale, seed=seed, n_devices=n_devices,
                           host_index=host_index, n_hosts=n_hosts,
@@ -389,6 +437,16 @@ class Controller:
                     consumer_deadline_s=consumer_deadline_s,
                     on_failure=on_failure, max_bytes=max_bytes,
                     retention_policy=retention_policy, checkpoint=ckpt)
+            if not chunk_s and plan.n_hosts > 1:
+                # PR 5 gap closed: publish this host's exact count rows
+                # into the shared store and, once every host's rows are
+                # there, replace the partial per-host matrices with the
+                # merged FULL S×S matrix (the last host to finish — and
+                # any later re-run — sees the complete artifact)
+                merged = self._publish_and_merge_fidelity(
+                    result, plan, fidelity_window_s)
+                if merged is not None:
+                    fidelity = merged
             self.last_fidelity = fidelity
             for fr in fidelity:
                 self.save_fidelity(fr)
@@ -400,6 +458,92 @@ class Controller:
         if ckpt is not None:
             ckpt.clear()     # sweep complete: the next run starts fresh
         return reports
+
+    def _run_service(self, datasets, max_ranges, originals, t_pre,
+                     consumer, *, scale, seed, queue_size, backend,
+                     fidelity_window_s, n_devices, host_index, n_hosts,
+                     fault_plan, retry_policy, breaker_threshold,
+                     consumer_deadline_s, on_failure, max_bytes,
+                     retention_policy, lease_ttl_s, service_poll_s,
+                     lease_batch, worker_id,
+                     service_deadline_s) -> List[SimulationReport]:
+        """The ``run_many(service=True)`` leg: one participant of the
+        lease-based sweep service. Every participant gets the full
+        grid's merged reports back; only the reports THIS worker
+        computed land in its local metrics repository (the shared store
+        carried them to every peer already)."""
+        from repro.streamsim.service import run_service_sweep
+
+        if n_hosts is None or host_index is None or n_devices is None:
+            from repro.distributed import process_topology
+            pidx, pcount, local = process_topology()
+            n_hosts = pcount if n_hosts is None else n_hosts
+            host_index = pidx if host_index is None else host_index
+            n_devices = local if n_devices is None else n_devices
+        if worker_id is None:
+            import os
+            worker_id = f"host{host_index}-{os.getpid()}"
+        reports, fidelity, mine = run_service_sweep(
+            self.store, datasets, max_ranges, originals, consumer,
+            scale=scale, seed=seed, t_pre=t_pre, queue_size=queue_size,
+            backend=backend, fidelity_window_s=fidelity_window_s,
+            n_devices=n_devices, lease_ttl_s=lease_ttl_s,
+            poll_s=service_poll_s, lease_batch=lease_batch,
+            breaker_threshold=breaker_threshold, worker_id=worker_id,
+            n_participants=n_hosts, deadline_s=service_deadline_s,
+            fault_plan=fault_plan, retry_policy=retry_policy,
+            consumer_deadline_s=consumer_deadline_s,
+            on_failure=on_failure, max_bytes=max_bytes,
+            retention_policy=retention_policy)
+        self.last_fidelity = fidelity
+        for fr in fidelity:
+            self.save_fidelity(fr)
+        from repro.streamsim.service import scenario_marker
+        own = set(mine)
+        for report in reports:
+            if scenario_marker(report.dataset, report.max_range) in own:
+                self.save_metrics(report)
+        return reports
+
+    def _publish_and_merge_fidelity(self, result, plan, window_s):
+        """Cross-host fidelity merge for STATIC multi-host sweeps.
+
+        Publishes this host's exact per-scenario count rows (plus the
+        per-dataset original rows) under the host-independent
+        ``sweep_group_id`` namespace, then attempts the same count-row
+        merge the sweep service uses. Returns the merged full-grid
+        :class:`FidelityReport` list, or None while peers' rows are
+        still missing (the caller keeps its partial per-host matrices —
+        exactly the pre-PR 9 behavior — until the last host closes the
+        sweep)."""
+        from repro.streamsim.service import (merge_fidelity, pack_counts,
+                                             scenario_marker)
+
+        gid = plan.sweep_group_id
+        ns = f"{gid}/fidelity"
+        worker = f"host{plan.host_index}"
+        for (d, mr), row in result.count_rows().items():
+            name = f"sim__{scenario_marker(d, mr)}"
+            # first-writer-wins: rows are deterministic (within backend
+            # tolerance), and keeping the first writer preserves true
+            # provenance — a later host re-reporting a cache hit must
+            # not claim the row it never computed
+            if not self.store.has_marker(ns, name):
+                self.store.put_marker(ns, name,
+                                      {"counts": pack_counts(row),
+                                       "worker": worker})
+        for d in plan.datasets:
+            name = f"orig__{d}"
+            if not self.store.has_marker(ns, name):
+                self.store.put_marker(ns, name, {
+                    "counts": pack_counts(result.om[d].counts),
+                    "worker": worker})
+        merged = merge_fidelity(self.store, gid, plan.datasets,
+                                plan.max_ranges, window_s=window_s)
+        D = len(plan.datasets)
+        complete = len(merged) == len(plan.max_ranges) and \
+            all(len(fr.labels) == 2 * D for fr in merged)
+        return merged if complete else None
 
     # -------------------------------------------------- (3) metrics manager
     def _unique_path(self, directory: Path, stem: str) -> Path:

@@ -135,11 +135,18 @@ class FidelityReport:
     window_s: int
     labels: List[str]
     trend_corr: List[List[float]]
+    #: cross-host merge provenance (PR 9): ``provenance[i]`` names the
+    #: host/worker that produced row ``i``'s count data, parallel to
+    #: ``labels``. None (single-host artifacts) keeps labels canonical
+    #: and the JSON payload byte-identical to pre-merge artifacts.
+    provenance: Optional[List[Optional[str]]] = None
 
     def to_json(self) -> Dict:
         d = dataclasses.asdict(self)
         d["trend_corr"] = [[None if v != v else v for v in row]
                            for row in self.trend_corr]
+        if self.provenance is None:
+            d.pop("provenance")
         return d
 
 
@@ -396,6 +403,27 @@ class DeviceSweepResult:
             return self._cached_sm[sc].counts
         return np.asarray(sr.hist)[r, :self.spans.get(sc, sc[1])] \
             .astype(np.int64)
+
+    def count_rows(self, scenarios=None) -> Dict[Tuple[str, int],
+                                                 np.ndarray]:
+        """Per-second simulated count rows gathered to host, scenario →
+        int64 array — the cross-host fidelity-merge export (PR 9). Count
+        rows are exact integers, so publishing them (instead of partial
+        correlation sub-matrices) lets the merging side recompute the
+        FULL S×S matrix with the same numpy reduction a single-host run
+        uses, making the merged artifact equal to the single-host one up
+        to backend tolerance rather than approximately stitched."""
+        if scenarios is None:
+            scenarios = self.scenarios
+        if self.mode == "host":
+            self._ensure_host_group()
+            return {sc: np.asarray(self.sm[sc].counts
+                                   if sc in self.sm
+                                   else self._cached_sm[sc].counts,
+                                   dtype=np.int64)
+                    for sc in scenarios}
+        src = self._scenario_sources()
+        return {sc: self._counts_host(sc, src) for sc in scenarios}
 
     # ------------------------------------------------------------- fidelity
     def fidelity(self, window_s: int = 60) -> List[FidelityReport]:
@@ -963,7 +991,8 @@ def run_sweep(result: DeviceSweepResult, consumer, *,
               on_failure: str = "raise",
               max_bytes: Optional[int] = None,
               retention_policy: str = "block",
-              checkpoint: Optional[SweepCheckpoint] = None
+              checkpoint: Optional[SweepCheckpoint] = None,
+              on_report=None, fidelity: bool = True
               ) -> Tuple[List[SimulationReport], List[FidelityReport]]:
     """Layer 3: fidelity matrices → materialize → batched replay → reports.
 
@@ -977,10 +1006,15 @@ def run_sweep(result: DeviceSweepResult, consumer, *,
     metrics repository). The resilience keywords pass straight through to
     :func:`replay_many`; ``checkpoint`` persists each report's completion
     marker as soon as it is assembled, so a sweep killed after k reports
-    resumes with exactly k scenarios done.
+    resumes with exactly k scenarios done. ``on_report`` (PR 9 service
+    publish hook) is called with each report as soon as it is assembled
+    — the sweep service uses it to publish result markers per scenario,
+    so a worker killed mid-batch loses only its unpublished tail.
+    ``fidelity=False`` skips the local matrix entirely (service workers
+    publish raw count rows instead and the merger owns the matrix).
     """
     t_pre = t_pre or {}
-    fidelity = result.fidelity(fidelity_window_s)
+    fid = result.fidelity(fidelity_window_s) if fidelity else []
     result._ensure_stats()        # device stats before the host pass
     sims = result.materialize()
     all_metrics, t_prod = replay_many(
@@ -994,8 +1028,10 @@ def run_sweep(result: DeviceSweepResult, consumer, *,
                          all_metrics[sc])
         if checkpoint is not None:
             checkpoint.mark_report(r)     # marker lands per report, so a
+        if on_report is not None:
+            on_report(r)
         reports.append(r)                 # kill leaves a clean prefix
-    return reports, fidelity
+    return reports, fid
 
 
 # ------------------------------------------------------- chunked pipeline

@@ -185,6 +185,21 @@ class SweepPlan:
             ident += repr((self.chunk_s, self.duration_s))
         return hashlib.sha256(ident.encode()).hexdigest()[:16]
 
+    @property
+    def sweep_group_id(self) -> str:
+        """Host-independent sweep identity — :attr:`sweep_id` minus the
+        host slot. Every host of a distributed run hashes the SAME value,
+        which is what makes it the *shared* marker namespace: the
+        service's work queue / leases / results and the cross-host
+        fidelity rows all live under this key, while per-host
+        checkpoints keep using :attr:`sweep_id`."""
+        import hashlib
+        ident = repr((tuple(self.datasets), tuple(self.max_ranges),
+                      self.scale, self.seed))
+        if self.chunk_s or self.duration_s:
+            ident += repr((self.chunk_s, self.duration_s))
+        return "g" + hashlib.sha256(ident.encode()).hexdigest()[:16]
+
     def padded_area(self) -> int:
         """Σ shard cost — the kernel work the plan actually dispatches."""
         return sum(sh.cost for sh in self.shards)

@@ -20,6 +20,12 @@ provides the four primitives the engine wires in:
   writes), so ``Controller.run_many(checkpoint=True)`` resumes a killed
   sweep from the last completed scenario with reports equal to an
   uninterrupted run.
+- :class:`Lease` / :class:`Heartbeat` — the sweep-service claim record
+  (PR 9): a lease binds a queued scenario to a worker for ``ttl_s``
+  seconds; a background :class:`Heartbeat` thread renews the deadline
+  while the worker computes, so only a *dead or wedged* worker's lease
+  ever expires and gets reaped (``docs/robustness.md`` documents the
+  full queue → lease → result protocol).
 
 All primitives are pure-host, numpy-free, and deliberately boring: the
 interesting guarantees (schedule determinism, report equality across a
@@ -30,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -39,6 +46,8 @@ __all__ = [
     "CircuitBreaker",
     "BreakerOpen",
     "SweepCheckpoint",
+    "Lease",
+    "Heartbeat",
 ]
 
 
@@ -243,3 +252,99 @@ class SweepCheckpoint:
 
     def clear(self) -> None:
         self.store.clear_markers(self.sweep_id)
+
+
+# ------------------------------------------------------------------ leases
+@dataclasses.dataclass
+class Lease:
+    """One worker's claim on one queued sweep scenario.
+
+    Persisted as the lease-marker payload in the service's
+    ``<group>/leases/`` namespace. ``deadline`` is *wall-clock*
+    (``time.time()``) because leases are judged by OTHER processes —
+    possibly on other hosts — where a monotonic clock has no shared
+    origin; ``beat`` is a per-renewal counter so a reaper can tell a
+    renewed lease from a stale re-read even under coarse filesystem
+    timestamps. ``attempts`` counts how many leases this scenario has
+    ever been granted (the poison-quarantine input: each expired lease
+    is one "this scenario killed a worker" strike).
+    """
+
+    worker: str
+    dataset: str
+    max_range: int
+    ttl_s: float
+    deadline: float
+    attempts: int = 1
+    beat: int = 0
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (time.time() if now is None else now) > self.deadline
+
+    def renew(self, now: Optional[float] = None) -> "Lease":
+        now = time.time() if now is None else now
+        return dataclasses.replace(self, deadline=now + self.ttl_s,
+                                   beat=self.beat + 1)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, payload: Dict) -> "Lease":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in payload.items() if k in fields})
+
+
+class Heartbeat:
+    """Daemon thread that renews a batch of leases while work runs.
+
+    Rewrites each lease marker every ``ttl_s / 3`` seconds (so a healthy
+    worker gets ~3 renewal chances per TTL window before a reaper could
+    act). A lease whose marker has *vanished* is dropped from the renewal
+    set rather than resurrected: the marker disappearing means a reaper
+    already reclaimed it (this worker overran its TTL — e.g. a long GC
+    pause), and rewriting it would fight the reaper's decision. The
+    worker discovers the loss via :attr:`lost` and skips publishing.
+
+    Renewal is *wall-clock extension only* — a worker wedged inside the
+    consumer keeps heartbeating, which is exactly why wedge detection is
+    delegated to the engine's ``consumer_deadline_s`` (the lease protocol
+    only defends against *dead* workers).
+    """
+
+    def __init__(self, store, sweep_id: str, leases: Dict[str, Lease],
+                 *, interval_s: Optional[float] = None):
+        self.store = store
+        self.sweep_id = sweep_id
+        self.leases = dict(leases)     # marker name -> Lease
+        ttl = min((l.ttl_s for l in self.leases.values()), default=1.0)
+        self.interval_s = interval_s if interval_s is not None else ttl / 3.0
+        self.lost: List[str] = []      # marker names a reaper reclaimed
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="sweep-lease-heartbeat")
+
+    def _renew_all(self) -> None:
+        for name in list(self.leases):
+            if not self.store.has_marker(self.sweep_id, name):
+                self.lost.append(name)
+                del self.leases[name]
+                continue
+            lease = self.leases[name].renew()
+            self.store.put_marker(self.sweep_id, name, lease.to_json())
+            self.leases[name] = lease
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self._renew_all()
+
+    def __enter__(self) -> "Heartbeat":
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=10.0)

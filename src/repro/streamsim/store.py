@@ -19,6 +19,23 @@ killed sweep from the last completed scenario. Marker writes use the same
 temp-file + ``os.replace`` discipline, so a kill mid-write never yields a
 half-marker; the ``_markers`` tree is invisible to the stream namespace
 (``list()`` only reports directories carrying a stream manifest).
+
+Marker namespaces nest (``<sweep_id>/queue``, ``<sweep_id>/leases``, …)
+and three filesystem-atomic primitives turn them into the distributed
+sweep service's arbitration substrate (:mod:`repro.streamsim.service`):
+
+- ``put_marker(..., exclusive=True)`` — create-if-absent (``os.link``
+  onto the temp file): exactly ONE of N concurrent writers wins, the
+  store-arbitrated "who publishes the work queue" election;
+- ``claim_marker`` — ``os.replace`` of one marker file into another
+  namespace: exactly ONE of N concurrent claimants moves
+  ``queue/<item>`` to ``leases/<item>`` (the loser's rename finds no
+  source), which is what makes a work-item lease a single atomic step;
+- ``clear_markers`` — rename-then-delete: the namespace directory is
+  atomically renamed to an invisible ``.trash-*`` sibling BEFORE any
+  file is unlinked, so a concurrent host observes the old sweep either
+  fully present or fully gone — never a half-cleared namespace that
+  looks like a fresh sweep with most scenarios "done".
 """
 
 from __future__ import annotations
@@ -27,6 +44,7 @@ import json
 import os
 import tempfile
 import time
+import uuid
 from pathlib import Path
 from typing import Dict, List, Optional
 
@@ -269,9 +287,15 @@ class StreamStore:
 
     # --------------------------------------------------------------- markers
     def _marker_dir(self, sweep_id: str) -> Path:
-        if not sweep_id or "/" in sweep_id or sweep_id.startswith("."):
+        """Marker namespace directory. ``sweep_id`` may nest
+        (``"<sweep>/queue"``): each ``/``-separated segment must be
+        non-empty and not dot-prefixed (dot-prefixed names are reserved
+        for :meth:`clear_markers`'s invisible trash directories)."""
+        segments = str(sweep_id).split("/")
+        if not sweep_id or any(not s or s.startswith(".") or s == ".."
+                               for s in segments):
             raise ValueError(f"bad sweep id {sweep_id!r}")
-        return self.root / "_markers" / sweep_id
+        return self.root.joinpath("_markers", *segments)
 
     @staticmethod
     def _marker_file(d: Path, name: str) -> Path:
@@ -279,20 +303,39 @@ class StreamStore:
             raise ValueError(f"bad marker name {name!r}")
         return d / f"{name}.json"
 
-    def put_marker(self, sweep_id: str, name: str, payload: Dict) -> None:
+    def put_marker(self, sweep_id: str, name: str, payload: Dict, *,
+                   exclusive: bool = False) -> bool:
         """Atomically persist one sweep completion marker (crash-safe:
-        temp file + ``os.replace``, the stream-write discipline)."""
+        temp file + ``os.replace``, the stream-write discipline).
+
+        ``exclusive=True`` switches to create-if-absent semantics
+        (``os.link`` of the temp file onto the target — atomic on POSIX):
+        when the marker already exists, nothing is written and False is
+        returned. Exactly one of N concurrent exclusive writers wins,
+        which is how the sweep service elects its work-queue publisher
+        without a coordinator. Returns True when this call wrote the
+        marker."""
         d = self._marker_dir(sweep_id)
         d.mkdir(parents=True, exist_ok=True)
         target = self._marker_file(d, name)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(payload, f)
-            os.replace(tmp, target)
+                # dumps-then-write, not json.dump: the streaming dump
+                # path bypasses the C encoder and is ~10x slower on the
+                # sweep service's large count-row payloads
+                f.write(json.dumps(payload))
+            if exclusive:
+                try:
+                    os.link(tmp, target)
+                except FileExistsError:
+                    return False
+            else:
+                os.replace(tmp, target)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        return True
 
     def get_marker(self, sweep_id: str, name: str) -> Dict:
         d = self._marker_dir(sweep_id)
@@ -302,6 +345,47 @@ class StreamStore:
     def has_marker(self, sweep_id: str, name: str) -> bool:
         return self._marker_file(self._marker_dir(sweep_id), name).exists()
 
+    def claim_marker(self, src_sweep_id: str, src_name: str,
+                     dst_sweep_id: str, dst_name: str) -> bool:
+        """Atomically MOVE a marker between namespaces (``os.replace``).
+
+        The sweep service's lease primitive: renaming
+        ``queue/<item>`` to ``leases/<item>`` both removes the item from
+        the queue and records the claim in one filesystem-atomic step, so
+        of N racing claimants exactly one succeeds — the others find the
+        source gone and get False. The payload travels with the file;
+        the winner typically rewrites it (e.g. with lease metadata)
+        immediately after.
+        """
+        src = self._marker_file(self._marker_dir(src_sweep_id), src_name)
+        d = self._marker_dir(dst_sweep_id)
+        d.mkdir(parents=True, exist_ok=True)
+        try:
+            os.replace(src, self._marker_file(d, dst_name))
+        except FileNotFoundError:
+            return False
+        return True
+
+    def remove_marker(self, sweep_id: str, name: str) -> bool:
+        """Delete one marker; False if it was already gone (losing this
+        race is normal — e.g. a reaper removing a lease whose worker
+        finished concurrently)."""
+        try:
+            self._marker_file(self._marker_dir(sweep_id), name).unlink()
+        except FileNotFoundError:
+            return False
+        return True
+
+    def marker_mtime(self, sweep_id: str, name: str) -> Optional[float]:
+        """Last-modified wall time of a marker file, or None if missing
+        (the reaper's fallback freshness signal for a lease claimed by a
+        worker that died before writing its lease payload)."""
+        try:
+            return self._marker_file(self._marker_dir(sweep_id),
+                                     name).stat().st_mtime
+        except FileNotFoundError:
+            return None
+
     def list_markers(self, sweep_id: str) -> List[str]:
         d = self._marker_dir(sweep_id)
         if not d.exists():
@@ -310,9 +394,29 @@ class StreamStore:
                       if p.suffix == ".json")
 
     def clear_markers(self, sweep_id: str) -> None:
+        """Remove the WHOLE ``_markers/<sweep_id>/`` namespace (including
+        nested sub-namespaces) atomically: the directory is first renamed
+        to an invisible dot-prefixed trash sibling (one ``os.rename``),
+        then deleted. A concurrent host therefore observes the namespace
+        either fully present or fully absent — never a half-cleared sweep
+        whose surviving markers misread as "mostly fresh". Concurrent
+        clears are safe: the losing rename finds the source gone and
+        returns. A crash after the rename leaves only an invisible trash
+        directory (``_marker_dir`` rejects dot-prefixed segments, and
+        ``list_markers`` ignores non-``.json`` entries), swept by the
+        next successful clear."""
+        import shutil
+
         d = self._marker_dir(sweep_id)
-        if not d.exists():
-            return
-        for p in d.iterdir():
-            p.unlink()
-        d.rmdir()
+        trash = d.parent / f".trash-{d.name}-{uuid.uuid4().hex[:8]}"
+        try:
+            os.rename(d, trash)
+        except FileNotFoundError:
+            pass
+        else:
+            shutil.rmtree(trash, ignore_errors=True)
+        # opportunistic sweep of trash left by a crashed earlier clear
+        if d.parent.exists():
+            for p in d.parent.iterdir():
+                if p.name.startswith(".trash-") and p.is_dir():
+                    shutil.rmtree(p, ignore_errors=True)

@@ -514,8 +514,14 @@ class TestCheckpointResume:
         store.clear_markers("sweep1")
         assert store.list_markers("sweep1") == []
         assert store.list() == []       # markers invisible to streams
+        # nested namespaces (the sweep service's layout) are legal, but
+        # empty or dot-prefixed segments stay out of the namespace
+        store.put_marker("a/b", "n", {})
+        assert store.list_markers("a/b") == ["n"]
         with pytest.raises(ValueError):
-            store.put_marker("a/b", "n", {})
+            store.put_marker("a//b", "n", {})
+        with pytest.raises(ValueError):
+            store.put_marker("a/.trash-x", "n", {})
         with pytest.raises(ValueError):
             store.put_marker("ok", "../n", {})
 
