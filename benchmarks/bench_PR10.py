@@ -1,0 +1,185 @@
+"""PR 10 trajectory rows: shape-keyed tile autotuner vs the fixed tiles.
+
+Two rows quantify what the measured-sweep tuner costs (a one-off
+candidate sweep, cached under the store) and buys (a tile choice at
+least as fast as the shipped constants — on CPU-interpret and current
+TPU shapes usually *the same* constants, which is exactly the guarantee
+being gated):
+
+- ``tuned_vs_fixed_metrics_86400`` — the one-day fused-metrics dispatch
+  (per-second histogram + volatility moments over ``max_range`` buckets).
+  NEW: the dispatch runs under an ambient ``KernelTuner("cached",
+  store=...)`` whose winner was measured on-device and persisted; the
+  timed leg hits the in-memory/JSON cache (zero sweep work). OLD: the
+  same dispatch with the fixed default tiles. Gated ≤ 1.0× by
+  ``check_regression.py``: the tuner may only ever *match or beat* the
+  fixed tiles — a tuned dispatch slower than the constants it replaces
+  means the oracle-gated sweep picked a loser or the cache lookup grew a
+  hot-path cost. The one-off cache-population sweep is explicitly NOT in
+  the timed leg; it is reported as the untimed ``tune_sweep_us`` field.
+
+- ``tuned_vs_fixed_sweep_8x6`` — the PR 5 planner shape (8 heterogeneous
+  streams × 6 time ranges, 48 scenarios) through the full
+  ``execute_sweep`` engine path, ``autotune="cached"`` vs the default
+  fixed-tile run. Same gate, same exclusion: the first tuned run
+  populates the shared tuner's cache (reported untimed as
+  ``tune_sweep_us``), the timed reps measure the steady state every
+  later sweep sees.
+
+Off-TPU both sides run the Pallas kernels in interpret mode at reduced
+shapes (``@`` name suffixes keep trend tooling honest), so the ratio
+measures the tuner's dispatch-time machinery — cache lookups and config
+plumbing — rather than silicon tile preferences; on TPU the same rows
+measure real tile wins.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from repro.kernels import ops, tuning
+from repro.streamsim import make_stream, plan_sweep, preprocess
+from repro.streamsim import engine as sweep_engine
+from repro.streamsim.store import StreamStore
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _tmin_pair(fn_a, fn_b, reps=3):
+    """((result_a, min_a), (result_b, min_b)) with a/b timed alternately
+    rep by rep — drifting machine load hits both legs equally instead of
+    landing entirely on whichever leg happened to run in the slow window.
+    For ratio-gated rows this is what keeps the comparison fair."""
+    out_a, out_b = fn_a(), fn_b()
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        assert r == out_a, "non-deterministic benchmark result"
+        t0 = time.perf_counter()
+        r = fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+        assert r == out_b, "non-deterministic benchmark result"
+    return (out_a, best_a), (out_b, best_b)
+
+
+def _hetero_streams(n, base_scale, seed=10):
+    """n streams with a record-count spread — the planner's target shape
+    (mirrors bench_PR5, so the two benches track the same regime)."""
+    names = ("sogouq", "traffic", "userbehavior")
+    out = {}
+    for i in range(n):
+        sc = base_scale * (1 + (i % 4)) * (2 if i >= n // 2 else 1)
+        s = preprocess(make_stream(names[i % 3], scale=sc, seed=seed + i))
+        s.name = f"s{i}"
+        out[f"s{i}"] = s
+    return out
+
+
+def run(csv: List[str]) -> None:
+    on_tpu = ops.on_tpu()
+    reps = 2 if QUICK else 4
+    tmp = tempfile.mkdtemp(prefix="bench_pr10_")
+    try:
+        store = StreamStore(os.path.join(tmp, "store"))
+
+        # --- one-day metrics dispatch: tuned vs fixed tiles --------------
+        if on_tpu:
+            mr, scale, tag = 86400, 0.05, ""
+        else:
+            # interpret mode: shrink the bucket axis so a candidate sweep
+            # costs seconds, not minutes — the machinery under test (cache
+            # lookup on the hot path) is shape-independent
+            mr, scale = 900, 0.004
+            tag = f"@mr{mr}-scale{scale}"
+        streams = [preprocess(make_stream(n, scale=scale, seed=10 + i))
+                   for i, n in enumerate(("sogouq", "traffic",
+                                          "userbehavior", "traffic"))]
+        stamps = []
+        for s in streams:
+            from repro.streamsim.nsa import nsa
+            stamps.append(nsa(s, mr, backend="pallas").scale_stamp)
+
+        tuner = tuning.KernelTuner("cached", store=store, reps=3)
+
+        def _fixed():
+            hist, mom, _ = ops.stream_metrics_batched(stamps, mr)
+            return int(np.asarray(hist).sum())
+
+        def _tuned():
+            with tuning.use(tuner):
+                hist, mom, _ = ops.stream_metrics_batched(stamps, mr)
+            return int(np.asarray(hist).sum())
+
+        # cache population (the one-off measured sweep + JSON persist) is
+        # deliberately OUTSIDE the timed legs: it is a per-(device, shape)
+        # cost amortized over every later dispatch
+        t0 = time.perf_counter()
+        _tuned()
+        tune_sweep_s = time.perf_counter() - t0
+        # the 1.0x gate leaves no noise margin and each leg costs only a
+        # few ms, so this row takes extra alternated reps — min-of-reps
+        # must converge on both sides before the ratio means anything
+        (got_tuned, dt_tuned), (got_fixed, dt_fixed) = _tmin_pair(
+            _tuned, _fixed, reps=max(reps, 8))
+        assert got_tuned == got_fixed, "tuned and fixed-tile metrics " \
+            f"must bucket identically ({got_tuned} vs {got_fixed})"
+        csv.append(
+            f"PR10/tuned_vs_fixed_metrics_86400{tag},{dt_tuned*1e6:.0f},"
+            f"streams={len(stamps)};max_range={mr};"
+            f"fixed_tile_path_us={dt_fixed*1e6:.0f};"
+            f"tune_sweep_us={tune_sweep_s*1e6:.0f};"
+            f"ratio={dt_tuned/max(dt_fixed, 1e-9):.2f}x")
+
+        # --- full 8x6 engine sweep: autotune="cached" vs default ---------
+        if on_tpu:
+            ranges, base, stag = (600, 1200, 1800, 2400, 3000, 3600), \
+                0.05, ""
+        else:
+            ranges = (60, 120, 180, 240, 300, 360)
+            base = 0.0001 if QUICK else 0.0002
+            stag = f"@scale{base}"
+        sweep_streams = _hetero_streams(8, base)
+        row_counts = {k: len(v) for k, v in sweep_streams.items()}
+
+        def _plan():
+            return plan_sweep(store, list(sweep_streams), ranges,
+                              row_counts, n_devices=4, host_index=0,
+                              n_hosts=1)
+
+        def _sweep_fixed():
+            result = sweep_engine.execute_sweep(_plan(), sweep_streams,
+                                                store, backend="pallas")
+            sims = result.materialize(store=False)
+            return sum(len(s) for s in sims.values())
+
+        def _sweep_tuned():
+            result = sweep_engine.execute_sweep(_plan(), sweep_streams,
+                                                store, backend="pallas",
+                                                autotune="cached")
+            sims = result.materialize(store=False)
+            return sum(len(s) for s in sims.values())
+
+        t0 = time.perf_counter()
+        _sweep_tuned()        # populates the shared cached tuner (untimed)
+        sweep_tune_s = time.perf_counter() - t0
+        (got_tuned, dt_tuned), (got_fixed, dt_fixed) = _tmin_pair(
+            _sweep_tuned, _sweep_fixed, reps=reps)
+        assert got_tuned == got_fixed, "tuned and fixed-tile sweeps must " \
+            f"produce identical simulated row totals " \
+            f"({got_tuned} vs {got_fixed})"
+        csv.append(
+            f"PR10/tuned_vs_fixed_sweep_8x6{stag},{dt_tuned*1e6:.0f},"
+            f"scenarios={8 * len(ranges)};"
+            f"fixed_tile_path_us={dt_fixed*1e6:.0f};"
+            f"tune_sweep_us={sweep_tune_s*1e6:.0f};"
+            f"ratio={dt_tuned/max(dt_fixed, 1e-9):.2f}x")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

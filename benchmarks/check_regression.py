@@ -49,6 +49,14 @@ replaced path" and ``1 / 1.2`` means "at least 1.2x faster".
   — the full service path (election, queue/lease/result markers,
   heartbeat, count-row merge) must stay within 15% of the direct
   ``run_many`` it wraps when nothing fails.
+- ``PR10/tuned_vs_fixed_metrics_86400`` / ``PR10/tuned_vs_fixed_sweep_8x6``
+  vs ``fixed_tile_path_us`` at ratio ``1.0`` — a dispatch running under
+  the cached tile autotuner must never lose to the fixed default tiles
+  it replaces (the tuner's floor IS the default config: it sits in the
+  candidate lattice, so a slower row means the oracle-gated sweep picked
+  a loser or cache lookup grew a hot-path cost). The one-off
+  cache-population sweep is excluded from the timed leg and reported as
+  the untimed ``tune_sweep_us`` field.
 
 Structural regressions (an accidental per-scenario dispatch loop, a
 padding blowup, a host round-trip creeping back in) show up as
@@ -84,6 +92,8 @@ GATES = {
     "PR8/task_serving": ("original_replay_us", 1 / 2),
     "PR9/service_failover_recovery": ("restart_from_zero_us", 1.0),
     "PR9/service_overhead": ("direct_run_many_us", 1.15),
+    "PR10/tuned_vs_fixed_metrics_86400": ("fixed_tile_path_us", 1.0),
+    "PR10/tuned_vs_fixed_sweep_8x6": ("fixed_tile_path_us", 1.0),
 }
 
 
@@ -96,15 +106,15 @@ def _expected_rows(path: str):
 
 
 def _check_row(rows, name: str, baseline_field: str,
-               max_ratio: float) -> int:
+               max_ratio: float, path: str) -> int:
     row = next((r for r in rows if r["name"].split("@")[0] == name), None)
     if row is None:
-        print(f"FAIL: no {name} row found", file=sys.stderr)
+        print(f"FAIL: no {name} row found [read {path}]", file=sys.stderr)
         return 1
     m = re.search(rf"{baseline_field}=(\d+(?:\.\d+)?)", row["derived"])
     if m is None:
-        print(f"FAIL: {row['name']} carries no {baseline_field} baseline",
-              file=sys.stderr)
+        print(f"FAIL: {row['name']} carries no {baseline_field} baseline "
+              f"[read {path}]", file=sys.stderr)
         return 1
     new, baseline = float(row["us_per_call"]), float(m.group(1))
     ok = new <= baseline * max_ratio
@@ -112,7 +122,7 @@ def _check_row(rows, name: str, baseline_field: str,
             else "needed no slower")
     print(f"{'OK' if ok else 'FAIL'}: {row['name']} = {new:.0f}us vs "
           f"replaced-path baseline {baseline:.0f}us "
-          f"({baseline / max(new, 1e-9):.1f}x; {need})")
+          f"({baseline / max(new, 1e-9):.1f}x; {need}) [read {path}]")
     if not ok:
         print(f"{name} misses its gate against the path it replaces — "
               "structural regression", file=sys.stderr)
@@ -138,11 +148,12 @@ def check(paths) -> int:
             continue
         for name in expected:
             field, max_ratio = GATES[name]
-            status |= _check_row(rows, name, field, max_ratio)
+            status |= _check_row(rows, name, field, max_ratio, path)
     return status
 
 
 if __name__ == "__main__":
     sys.exit(check(sys.argv[1:] or ["BENCH_PR4.json", "BENCH_PR5.json",
                                     "BENCH_PR6.json", "BENCH_PR7.json",
-                                    "BENCH_PR8.json", "BENCH_PR9.json"]))
+                                    "BENCH_PR8.json", "BENCH_PR9.json",
+                                    "BENCH_PR10.json"]))

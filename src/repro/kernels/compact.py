@@ -26,15 +26,18 @@ the range-padded NSA sweep: every (dataset × max_range) scenario is a row.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import DEFAULT_CONFIG, TileConfig
+
 LANE = 128
 SUBLANE = 8
-TILE = LANE * SUBLANE  # records per grid step
+TILE = LANE * SUBLANE  # records per grid step with the default TileConfig
 
 
 def _kernel(mask_ref, pos_ref, total_ref, carry_ref):
@@ -58,25 +61,29 @@ def _kernel(mask_ref, pos_ref, total_ref, carry_ref):
     total_ref[0] = carry_ref[0]                      # last grid step wins
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def compact_positions_pallas(mask: jnp.ndarray, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "config"))
+def compact_positions_pallas(mask: jnp.ndarray, *, interpret: bool = False,
+                             config: Optional[TileConfig] = None):
     """mask: (n,) int32 0/1, n % TILE == 0 (pad with 0).
 
     Returns ``(pos int32 (n,), total int32 (1,))`` where ``pos[i]`` is the
     exclusive prefix sum of the mask (the output slot of record ``i`` if it
     is kept) and ``total`` the number of set mask entries.
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     n = mask.shape[0]
-    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert n % cfg.record_tile == 0, \
+        f"pad records to a multiple of {cfg.record_tile}"
     rows = n // LANE
     m2 = mask.reshape(rows, LANE)
-    grid = (rows // SUBLANE,)
+    grid = (rows // sublane,)
     pos, total = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((sublane, LANE), lambda i: (i, 0))],
         out_specs=[
-            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((sublane, LANE), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_shape=[
@@ -107,9 +114,10 @@ def _kernel_batched(mask_ref, pos_ref, total_ref, carry_ref):
     total_ref[0, 0] = carry_ref[0]                   # row's last tile wins
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "config"))
 def compact_positions_batched_pallas(mask: jnp.ndarray, *,
-                                     interpret: bool = False):
+                                     interpret: bool = False,
+                                     config: Optional[TileConfig] = None):
     """Batched mask compaction: R rows' scans in ONE 2-D-grid dispatch.
 
     mask: (R, N) int32 0/1, N % TILE == 0 (pad record tails with 0).
@@ -120,17 +128,20 @@ def compact_positions_batched_pallas(mask: jnp.ndarray, *,
     count. The SMEM carry resets at each row's first record tile, so rows
     are independent (bit-identical to R sequential single-row dispatches).
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     R, n = mask.shape
-    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert n % cfg.record_tile == 0, \
+        f"pad records to a multiple of {cfg.record_tile}"
     rows = n // LANE
     m3 = mask.reshape(R, rows, LANE)
-    grid = (R, rows // SUBLANE)
+    grid = (R, rows // sublane)
     pos, totals = pl.pallas_call(
         _kernel_batched,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, SUBLANE, LANE), lambda r, i: (r, i, 0))],
+        in_specs=[pl.BlockSpec((1, sublane, LANE), lambda r, i: (r, i, 0))],
         out_specs=[
-            pl.BlockSpec((1, SUBLANE, LANE), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda r, i: (r, i, 0)),
             pl.BlockSpec((1, 1), lambda r, i: (r, 0)),
         ],
         out_shape=[

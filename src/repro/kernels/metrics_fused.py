@@ -61,18 +61,22 @@ one-hot column and never contribute to any count or moment.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import DEFAULT_CONFIG, TileConfig
+
 LANE = 128
 SUBLANE = 8
-TILE = LANE * SUBLANE      # records per grid step
-BUCKET_BLOCK = 4 * LANE    # bucket columns compared per inner-loop step
+TILE = LANE * SUBLANE      # records per grid step (default TileConfig)
+BUCKET_BLOCK = 4 * LANE    # bucket columns per inner step (default config)
 
 
-def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int):
+def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int, sublane: int,
+            bucket_block: int):
     i = pl.program_id(1)
     num_tiles = pl.num_programs(1)
 
@@ -81,23 +85,24 @@ def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
         mom_ref[...] = jnp.zeros_like(mom_ref)
 
-    ss = ss_ref[0].reshape(TILE)                     # (TILE,) int32
+    tile = sublane * LANE
+    ss = ss_ref[0].reshape(tile)                     # (tile,) int32
     valid = ss < buckets                             # padding id >= buckets
 
     # data-adaptive bucket-block range: sorted stamps => a tile spans few
     # blocks; an all-padding tile runs zero iterations
-    lo = jnp.min(jnp.where(valid, ss, buckets - 1)) // BUCKET_BLOCK
-    hi = jnp.max(jnp.where(valid, ss, 0)) // BUCKET_BLOCK
+    lo = jnp.min(jnp.where(valid, ss, buckets - 1)) // bucket_block
+    hi = jnp.max(jnp.where(valid, ss, 0)) // bucket_block
     upper = jnp.where(jnp.any(valid), hi + 1, lo)
 
     def body(blk, carry):
-        base = blk * BUCKET_BLOCK
+        base = blk * bucket_block
         ids = base + jax.lax.broadcasted_iota(
-            jnp.int32, (TILE, BUCKET_BLOCK), 1)
+            jnp.int32, (tile, bucket_block), 1)
         partial = jnp.sum((ss[:, None] == ids).astype(jnp.int32), axis=0,
-                          keepdims=True)             # (1, BUCKET_BLOCK) int32
-        cur = hist_ref[:, pl.ds(base, BUCKET_BLOCK)]
-        hist_ref[:, pl.ds(base, BUCKET_BLOCK)] = cur + partial
+                          keepdims=True)             # (1, bucket_block) int32
+        cur = hist_ref[:, pl.ds(base, bucket_block)]
+        hist_ref[:, pl.ds(base, bucket_block)] = cur + partial
         return carry
 
     jax.lax.fori_loop(lo, upper, body, 0)
@@ -112,7 +117,7 @@ def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int):
         # Tightens the engine's moment agreement from ~1e-3 to ~1e-5.
         def kahan(blk, carry):
             s1, c1, s2, c2 = carry
-            q = hist_ref[:, pl.ds(blk * BUCKET_BLOCK, BUCKET_BLOCK)] \
+            q = hist_ref[:, pl.ds(blk * bucket_block, bucket_block)] \
                 .astype(jnp.float32)                 # padding buckets are 0
             y1 = jnp.sum(q) - c1
             t1 = s1 + y1
@@ -122,12 +127,13 @@ def _kernel(ss_ref, hist_ref, mom_ref, *, buckets: int):
 
         zero = jnp.float32(0.0)
         s1, _, s2, _ = jax.lax.fori_loop(
-            0, buckets // BUCKET_BLOCK, kahan, (zero, zero, zero, zero))
+            0, buckets // bucket_block, kahan, (zero, zero, zero, zero))
         mom_ref[0, 0] = s1
         mom_ref[0, 1] = s2
 
 
-def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
+def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int,
+                  sublane: int, bucket_block: int):
     """Chunked variant of :func:`_kernel`: the final moment reduction seeds
     its pairwise+Kahan fold from a per-row carry-in ``[s1, c1, s2, c2]`` and
     emits the UPDATED 4-state instead of the bare ``[Σq, Σq²]`` pair, so
@@ -144,21 +150,22 @@ def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
         mom_ref[...] = jnp.zeros_like(mom_ref)
 
-    ss = ss_ref[0].reshape(TILE)                     # (TILE,) int32
+    tile = sublane * LANE
+    ss = ss_ref[0].reshape(tile)                     # (tile,) int32
     valid = ss < buckets                             # padding id >= buckets
 
-    lo = jnp.min(jnp.where(valid, ss, buckets - 1)) // BUCKET_BLOCK
-    hi = jnp.max(jnp.where(valid, ss, 0)) // BUCKET_BLOCK
+    lo = jnp.min(jnp.where(valid, ss, buckets - 1)) // bucket_block
+    hi = jnp.max(jnp.where(valid, ss, 0)) // bucket_block
     upper = jnp.where(jnp.any(valid), hi + 1, lo)
 
     def body(blk, carry):
-        base = blk * BUCKET_BLOCK
+        base = blk * bucket_block
         ids = base + jax.lax.broadcasted_iota(
-            jnp.int32, (TILE, BUCKET_BLOCK), 1)
+            jnp.int32, (tile, bucket_block), 1)
         partial = jnp.sum((ss[:, None] == ids).astype(jnp.int32), axis=0,
-                          keepdims=True)             # (1, BUCKET_BLOCK) int32
-        cur = hist_ref[:, pl.ds(base, BUCKET_BLOCK)]
-        hist_ref[:, pl.ds(base, BUCKET_BLOCK)] = cur + partial
+                          keepdims=True)             # (1, bucket_block) int32
+        cur = hist_ref[:, pl.ds(base, bucket_block)]
+        hist_ref[:, pl.ds(base, bucket_block)] = cur + partial
         return carry
 
     jax.lax.fori_loop(lo, upper, body, 0)
@@ -167,7 +174,7 @@ def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
     def _moments():
         def kahan(blk, carry):
             s1, c1, s2, c2 = carry
-            q = hist_ref[:, pl.ds(blk * BUCKET_BLOCK, BUCKET_BLOCK)] \
+            q = hist_ref[:, pl.ds(blk * bucket_block, bucket_block)] \
                 .astype(jnp.float32)                 # padding buckets are 0
             y1 = jnp.sum(q) - c1
             t1 = s1 + y1
@@ -176,7 +183,7 @@ def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
             return t1, (t1 - s1) - y1, t2, (t2 - s2) - y2
 
         s1, c1, s2, c2 = jax.lax.fori_loop(
-            0, buckets // BUCKET_BLOCK, kahan,
+            0, buckets // bucket_block, kahan,
             (mcar_ref[0, 0], mcar_ref[0, 1], mcar_ref[0, 2], mcar_ref[0, 3]))
         mom_ref[0, 0] = s1
         mom_ref[0, 1] = c1
@@ -184,9 +191,11 @@ def _kernel_carry(ss_ref, mcar_ref, hist_ref, mom_ref, *, buckets: int):
         mom_ref[0, 3] = c2
 
 
-@functools.partial(jax.jit, static_argnames=("buckets", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("buckets", "interpret", "config"))
 def stream_metrics_carry_pallas(ss: jnp.ndarray, mcar: jnp.ndarray,
-                                buckets: int, *, interpret: bool = False):
+                                buckets: int, *, interpret: bool = False,
+                                config: Optional[TileConfig] = None):
     """Fused histogram + carried Kahan moments over ONE time chunk.
 
     ss      : (S, N) int32 chunk-LOCAL scale stamps (the caller rebases the
@@ -202,18 +211,22 @@ def stream_metrics_carry_pallas(ss: jnp.ndarray, mcar: jnp.ndarray,
     zero carry, ``(hist, mom[:, ::2])`` is bit-identical to
     :func:`stream_metrics_pallas` on the same input.
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     S, n = ss.shape
-    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
-    assert buckets % BUCKET_BLOCK == 0, \
-        f"pad buckets to a multiple of {BUCKET_BLOCK}"
+    assert n % cfg.record_tile == 0, \
+        f"pad records to a multiple of {cfg.record_tile}"
+    assert buckets % cfg.bucket_block == 0, \
+        f"pad buckets to a multiple of {cfg.bucket_block}"
     rows = n // LANE
     ss3 = ss.reshape(S, rows, LANE)
-    grid = (S, rows // SUBLANE)
+    grid = (S, rows // sublane)
     hist, mom = pl.pallas_call(
-        functools.partial(_kernel_carry, buckets=buckets),
+        functools.partial(_kernel_carry, buckets=buckets, sublane=sublane,
+                          bucket_block=cfg.bucket_block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
             pl.BlockSpec((1, 4), lambda s, i: (s, 0)),
         ],
         out_specs=[
@@ -229,9 +242,11 @@ def stream_metrics_carry_pallas(ss: jnp.ndarray, mcar: jnp.ndarray,
     return hist, mom
 
 
-@functools.partial(jax.jit, static_argnames=("buckets", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("buckets", "interpret", "config"))
 def stream_metrics_pallas(ss: jnp.ndarray, buckets: int, *,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          config: Optional[TileConfig] = None):
     """Fused batched histogram + moments over stacked scale-stamp streams.
 
     ss      : (S, N) int32, N % TILE == 0; entries in [0, buckets) count,
@@ -241,17 +256,21 @@ def stream_metrics_pallas(ss: jnp.ndarray, buckets: int, *,
     Returns ``(hist int32 (S, buckets), moments f32 (S, 2))`` with
     ``moments[s] = [Σ_b hist[s, b], Σ_b hist[s, b]²]``.
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     S, n = ss.shape
-    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
-    assert buckets % BUCKET_BLOCK == 0, \
-        f"pad buckets to a multiple of {BUCKET_BLOCK}"
+    assert n % cfg.record_tile == 0, \
+        f"pad records to a multiple of {cfg.record_tile}"
+    assert buckets % cfg.bucket_block == 0, \
+        f"pad buckets to a multiple of {cfg.bucket_block}"
     rows = n // LANE
     ss3 = ss.reshape(S, rows, LANE)
-    grid = (S, rows // SUBLANE)
+    grid = (S, rows // sublane)
     hist, mom = pl.pallas_call(
-        functools.partial(_kernel, buckets=buckets),
+        functools.partial(_kernel, buckets=buckets, sublane=sublane,
+                          bucket_block=cfg.bucket_block),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0))],
+        in_specs=[pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0))],
         out_specs=[
             pl.BlockSpec((1, buckets), lambda s, i: (s, 0)),
             pl.BlockSpec((1, 2), lambda s, i: (s, 0)),

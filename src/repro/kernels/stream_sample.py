@@ -46,14 +46,17 @@ reshapes to (S, rows, 128) so the lane dimension is hardware-native.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import DEFAULT_CONFIG, TileConfig
+
 LANE = 128
 SUBLANE = 8
-TILE = LANE * SUBLANE  # records per grid step
+TILE = LANE * SUBLANE  # records per grid step with the default TileConfig
 
 # the +-1 snap correction is only guaranteed while the f32 normalize error
 # stays under one bucket: ~4 * max_range * 2^-24 < 1
@@ -61,10 +64,11 @@ MAX_RANGE_LIMIT = 1 << 20
 
 
 def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
-            keep_ref, *, max_range: int):
+            keep_ref, *, max_range: int, sublane: int):
     del max_range  # table width only; each row carries its own bucket count
+    tile = sublane * LANE
     i = pl.program_id(1)
-    t = t_ref[0].astype(jnp.float32)             # (SUBLANE, LANE)
+    t = t_ref[0].astype(jnp.float32)             # (sublane, LANE)
     t_min = scalar_ref[0, 0]
     inv_span = scalar_ref[0, 1]                  # 1/span, precomputed
     nb_f = scalar_ref[0, 2]                      # this row's bucket count
@@ -77,9 +81,9 @@ def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
     g = jnp.floor((t - t_min) * inv_span * nb_f).astype(jnp.int32)
     g = jnp.clip(g, 0, nb - 1)
 
-    base = i * TILE
-    row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 0)
-    col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANE, LANE), 1)
+    base = i * tile
+    row = jax.lax.broadcasted_iota(jnp.int32, (sublane, LANE), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (sublane, LANE), 1)
     gidx = base + row * LANE + col               # per-stream record index
 
     # --- snap the f32 guess to the bucket that actually contains gidx ---
@@ -100,16 +104,22 @@ def _kernel(t_ref, starts_ref, counts_ref, k_ref, scalar_ref, ss_ref,
     keep_ref[0] = keep.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("max_range", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("max_range", "interpret", "config"))
 def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
                          counts: jnp.ndarray, ktab: jnp.ndarray,
                          scalars: jnp.ndarray, max_range: int, *,
-                         interpret: bool = False):
+                         interpret: bool = False,
+                         config: Optional[TileConfig] = None):
     """Batched fused NSA inner loop (range-padded rows).
 
     t       : (S, N) float32 per-stream rebased timestamps, sorted along the
-              record axis, N % TILE == 0 (pad tails with any finite value —
-              padded keep bits are garbage; the wrapper masks by length).
+              record axis, N % record_tile == 0 (pad tails with any finite
+              value — padded keep bits are garbage; the wrapper masks by
+              length). ``config`` picks the record tile
+              (:class:`repro.kernels.tuning.TileConfig`; ``None`` = the
+              default 1024-record tile — bit-identical to the pre-tuner
+              kernel).
     starts  : (S, max_range) int32 exact per-bucket start offsets; tail
               entries past a row's ``n_buckets`` must be the record count.
     counts  : (S, max_range) int32 exact per-bucket sizes (0 past
@@ -123,26 +133,29 @@ def stream_sample_pallas(t: jnp.ndarray, starts: jnp.ndarray,
     ``n_buckets`` scalar, so rows at different time ranges batch into one
     dispatch. Returns (scale_stamp int32 (S, N), keep int32 (S, N)).
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     S, n = t.shape
-    assert n % TILE == 0, f"pad records to a multiple of {TILE}"
+    assert n % cfg.record_tile == 0, \
+        f"pad records to a multiple of {cfg.record_tile}"
     assert max_range <= MAX_RANGE_LIMIT, \
         f"max_range {max_range} too large for the +-1 bucket snap"
     rows = n // LANE
     t3 = t.reshape(S, rows, LANE)
-    grid = (S, rows // SUBLANE)
+    grid = (S, rows // sublane)
     ss, keep = pl.pallas_call(
-        functools.partial(_kernel, max_range=max_range),
+        functools.partial(_kernel, max_range=max_range, sublane=sublane),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
             pl.BlockSpec((1, max_range), lambda s, i: (s, 0)),
             pl.BlockSpec((1, 3), lambda s, i: (s, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),

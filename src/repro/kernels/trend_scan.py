@@ -49,16 +49,19 @@ the (8, 128) record tile (``trend_scan``) or of ``PAIR_TILE`` lanes
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import DEFAULT_CONFIG, TileConfig
+
 LANE = 128
 SUBLANE = 8
-TILE = LANE * SUBLANE   # time steps per trend-scan grid step
-PAIR_TILE = 4 * LANE    # time steps per pair-stats grid step
+TILE = LANE * SUBLANE   # time steps per grid step (default TileConfig)
+PAIR_TILE = 4 * LANE    # time steps per pair-stats step (default config)
 
 
 def _scan_kernel(q_ref, psum_ref, carry_ref):
@@ -82,8 +85,9 @@ def _scan_kernel(q_ref, psum_ref, carry_ref):
     carry_ref[0] = carry + jnp.sum(q)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def trend_scan_pallas(q: jnp.ndarray, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "config"))
+def trend_scan_pallas(q: jnp.ndarray, *, interpret: bool = False,
+                      config: Optional[TileConfig] = None):
     """Batched inclusive prefix sum over stacked per-second count series.
 
     q : (S, N) int32, N % TILE == 0 (pad time tails with 0).
@@ -92,16 +96,19 @@ def trend_scan_pallas(q: jnp.ndarray, *, interpret: bool = False):
     ``psum[s, i] = Σ_{j <= i} q[s, j]`` — exact while each stream's total
     stays below 2³¹ (the ops wrapper guards this).
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     S, n = q.shape
-    assert n % TILE == 0, f"pad time steps to a multiple of {TILE}"
+    assert n % cfg.record_tile == 0, \
+        f"pad time steps to a multiple of {cfg.record_tile}"
     rows = n // LANE
     q3 = q.reshape(S, rows, LANE)
-    grid = (S, rows // SUBLANE)
+    grid = (S, rows // sublane)
     psum = pl.pallas_call(
         _scan_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0))],
-        out_specs=pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+        in_specs=[pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0))],
+        out_specs=pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
         out_shape=jax.ShapeDtypeStruct((S, rows, LANE), jnp.int32),
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
@@ -130,9 +137,10 @@ def _scan_kernel_carry(init_ref, q_ref, psum_ref, tail_ref, carry_ref):
         tail_ref[0, 0] = carry_ref[0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "config"))
 def trend_scan_carry_pallas(q: jnp.ndarray, init: jnp.ndarray, *,
-                            interpret: bool = False):
+                            interpret: bool = False,
+                            config: Optional[TileConfig] = None):
     """Chunked form of :func:`trend_scan_pallas`: the SMEM running carry is
     *seeded* from a per-row carry-in instead of reset to zero, so prefix
     sums over consecutive time chunks compose exactly.
@@ -148,20 +156,23 @@ def trend_scan_carry_pallas(q: jnp.ndarray, init: jnp.ndarray, *,
     row's new running total — the ``init`` to feed the next chunk. Exact
     while the cumulative total stays below 2³¹ (ops-wrapper guarded).
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    sublane = cfg.sublane
     S, n = q.shape
-    assert n % TILE == 0, f"pad time steps to a multiple of {TILE}"
+    assert n % cfg.record_tile == 0, \
+        f"pad time steps to a multiple of {cfg.record_tile}"
     rows = n // LANE
     q3 = q.reshape(S, rows, LANE)
-    grid = (S, rows // SUBLANE)
+    grid = (S, rows // sublane)
     psum, tail = pl.pallas_call(
         _scan_kernel_carry,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, SUBLANE, LANE), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, sublane, LANE), lambda s, i: (s, i, 0)),
             pl.BlockSpec((1, 1), lambda s, i: (s, 0)),
         ],
         out_shape=[
@@ -187,8 +198,9 @@ def _pair_kernel(x_ref, sums_ref, gram_ref):
     gram_ref[...] += jnp.dot(x, x.T, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def pair_stats_pallas(x: jnp.ndarray, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "config"))
+def pair_stats_pallas(x: jnp.ndarray, *, interpret: bool = False,
+                      config: Optional[TileConfig] = None):
     """All-pairs Pearson sufficient statistics over stacked trend series.
 
     x : (S, K) float32, K % PAIR_TILE == 0 (pad time tails with 0.0 —
@@ -200,13 +212,16 @@ def pair_stats_pallas(x: jnp.ndarray, *, interpret: bool = False):
     accumulated tile-by-tile with the (sums, gram) outputs VMEM-resident
     across the time grid.
     """
+    cfg = DEFAULT_CONFIG if config is None else config
+    pair_tile = cfg.bucket_block      # the pair-stats time tile knob
     S, k = x.shape
-    assert k % PAIR_TILE == 0, f"pad time steps to a multiple of {PAIR_TILE}"
-    grid = (k // PAIR_TILE,)
+    assert k % pair_tile == 0, \
+        f"pad time steps to a multiple of {pair_tile}"
+    grid = (k // pair_tile,)
     sums, gram = pl.pallas_call(
         _pair_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((S, PAIR_TILE), lambda i: (0, i))],
+        in_specs=[pl.BlockSpec((S, pair_tile), lambda i: (0, i))],
         out_specs=[
             pl.BlockSpec((S, 1), lambda i: (0, 0)),
             pl.BlockSpec((S, S), lambda i: (0, 0)),

@@ -137,7 +137,8 @@ class Controller:
     def run(self, dataset: str, max_range: int,
             consumer: Callable[[StreamQueue], Dict], *,
             scale: float = 1.0, seed: int = 0,
-            queue_size: int = 64, backend: str = "auto") -> SimulationReport:
+            queue_size: int = 64, backend: str = "auto",
+            autotune: Optional[str] = None) -> SimulationReport:
         """Full pipeline: POSD -> NSA -> PSDA -> consumer (the SPS task).
 
         A thin driver: the scenario becomes a one-cell
@@ -163,6 +164,12 @@ class Controller:
             bit-identical across backends; metric statistics agree within
             the documented 1e-3 tolerance; out-of-domain inputs fall back
             to numpy automatically.
+        autotune : {None, "off", "cached", "force"}, optional
+            Kernel tile-tuning mode for every device leg (see
+            :mod:`repro.kernels.tuning`). ``None``/``"off"`` keep the
+            fixed default tiles (bit-identical to prior releases);
+            ``"cached"`` reuses measured winners persisted under the
+            store; ``"force"`` re-sweeps the candidate lattice on-device.
 
         Returns
         -------
@@ -183,7 +190,7 @@ class Controller:
                           scale=scale, seed=seed, n_hosts=1, host_index=0,
                           n_devices=1)
         result = engine.execute_sweep(plan, originals, self.store,
-                                      backend=backend)
+                                      backend=backend, autotune=autotune)
         sim = result.materialize()[(dataset, max_range)]
         consumer_metrics, t_prod = engine.replay_one(sim, consumer,
                                                      queue_size)
@@ -215,7 +222,8 @@ class Controller:
                  service_poll_s: float = 0.2,
                  lease_batch: int = 1,
                  worker_id: Optional[str] = None,
-                 service_deadline_s: Optional[float] = None
+                 service_deadline_s: Optional[float] = None,
+                 autotune: Optional[str] = None
                  ) -> List[SimulationReport]:
         """The Tables 1-3 scenario sweep (datasets × time ranges), planned
         and executed by the sweep engine.
@@ -418,7 +426,7 @@ class Controller:
             if chunk_s:
                 runner = engine.ChunkedSweepRunner(
                     plan, originals, self.store, backend=backend,
-                    checkpoint=ckpt)
+                    checkpoint=ckpt, autotune=autotune)
                 new_reports, fidelity = engine.run_sweep_chunked(
                     runner, consumer, queue_size=queue_size,
                     fidelity_window_s=fidelity_window_s, t_pre=t_pre,
@@ -428,7 +436,8 @@ class Controller:
             else:
                 result = engine.execute_sweep(plan, originals, self.store,
                                               backend=backend,
-                                              checkpoint=ckpt)
+                                              checkpoint=ckpt,
+                                              autotune=autotune)
                 new_reports, fidelity = engine.run_sweep(
                     result, consumer, queue_size=queue_size,
                     fidelity_window_s=fidelity_window_s, t_pre=t_pre,

@@ -182,12 +182,16 @@ class DeviceSweepResult:
     """
 
     def __init__(self, plan: SweepPlan, originals: Dict[str, Stream],
-                 store, backend: str, mode: str):
+                 store, backend: str, mode: str,
+                 autotune: Optional[str] = None):
         self.plan = plan
         self.originals = originals
         self.store = store
         self.backend = backend
         self.mode = mode
+        #: tile-tuning mode for every deferred device leg (fidelity,
+        #: host-group metrics) — the winners persist under the store
+        self.autotune = autotune
         self.nsa_s: Dict[Tuple[str, int], float] = {}
         self.shard_results: List[ShardResult] = []
         #: cache-hit sims (host mode: ALL sims), loaded/computed on host
@@ -234,7 +238,7 @@ class DeviceSweepResult:
             [self.originals[d] for d in datasets] +
             [self.host_sims[sc] for sc in cached],
             [None] * len(datasets) + [mr for _, mr in cached],
-            backend=self.backend)
+            backend=self.backend, autotune=self.autotune)
         self._om = dict(zip(datasets, ms[:len(datasets)]))
         self._cached_sm = dict(zip(cached, ms[len(datasets):]))
 
@@ -439,7 +443,7 @@ class DeviceSweepResult:
         """
         import jax.numpy as jnp
 
-        from repro.kernels import ops
+        from repro.kernels import ops, tuning
 
         datasets = list(self.plan.datasets)
         out = []
@@ -456,7 +460,8 @@ class DeviceSweepResult:
                 matrix = trend_correlation_matrix(
                     [self.om[d].counts for d in row_ds] +
                     [self.sm[(d, mr)].counts for d in row_ds],
-                    window_s=window_s, backend=self.backend)
+                    window_s=window_s, backend=self.backend,
+                    autotune=self.autotune)
             else:
                 try:
                     om_mat, om_trs, om_totals, didx = \
@@ -475,8 +480,10 @@ class DeviceSweepResult:
                     qmat = jnp.concatenate([om_sel, qb], axis=0)
                     lengths = np.concatenate([om_trs[sel], lb])
                     totals = np.concatenate([om_totals[sel], sim_totals])
-                    matrix = ops.trend_correlation_batched_device(
-                        qmat, lengths, window_s, totals=totals)
+                    with tuning.tuner_context(self.autotune,
+                                              store=self.store or None):
+                        matrix = ops.trend_correlation_batched_device(
+                            qmat, lengths, window_s, totals=totals)
                 except ops.PallasDomainError:
                     matrix = trend_correlation_matrix(
                         [self.om[d].counts for d in row_ds] +
@@ -534,8 +541,8 @@ class DeviceSweepResult:
 
 def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
                   backend: str = "auto", multiple_mode: str = "time",
-                  checkpoint: Optional[SweepCheckpoint] = None
-                  ) -> DeviceSweepResult:
+                  checkpoint: Optional[SweepCheckpoint] = None,
+                  autotune: Optional[str] = None) -> DeviceSweepResult:
     """Execute a plan's NSA + metrics stages (layer 2 of the sweep).
 
     Device mode (resolved ``"pallas"``): each shard runs ONE
@@ -563,10 +570,10 @@ def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
     result = None
     if device_ok:
         result = _execute_device(plan, originals, store, backend,
-                                 multiple_mode)
+                                 multiple_mode, autotune)
     if result is None:
         result = _execute_host(plan, originals, store, backend,
-                               multiple_mode)
+                               multiple_mode, autotune)
     result.checkpoint = checkpoint
     if checkpoint is not None and result.mode == "host" and store:
         # host mode persists its sims eagerly inside _execute_host
@@ -575,40 +582,43 @@ def execute_sweep(plan: SweepPlan, originals: Dict[str, Stream], store, *,
     return result
 
 
-def _execute_device(plan, originals, store, backend, multiple_mode
-                    ) -> Optional[DeviceSweepResult]:
+def _execute_device(plan, originals, store, backend, multiple_mode,
+                    autotune=None) -> Optional[DeviceSweepResult]:
     """The pallas path; returns None when a domain error demands the
     wholesale host fallback."""
     import jax
 
-    from repro.kernels import ops
+    from repro.kernels import ops, tuning
 
-    result = DeviceSweepResult(plan, originals, store, backend, "device")
+    result = DeviceSweepResult(plan, originals, store, backend, "device",
+                               autotune=autotune)
     devices = jax.local_devices()
     total_nsa = 0.0
     try:
-        for shard in plan.shards:
-            pairs = tuple(s.scenario for s in shard.specs)
-            dev = devices[shard.device_index % len(devices)]
-            t0 = time.perf_counter()
-            ss_kept, idx, totals, _ = nsa_sweep_device(
-                originals, pairs, multiple_mode=multiple_mode, device=dev)
-            # compaction packed every row's kept stamps to the front, so
-            # the metrics dispatch only needs the kept-width column slice
-            # (device slice — kept counts are far below the padded source
-            # width after compression)
-            n_kept = int(-(-max(int(totals.max(initial=1)), 1)
-                           // ops.TILE) * ops.TILE)
-            hist, mom = ops.stream_metrics_batched_device(
-                ss_kept[:, :min(n_kept, ss_kept.shape[1])], totals,
-                shard.max_range)
-            mom_host = np.asarray(mom, np.float64)   # O(rows) scalars
-            dt = time.perf_counter() - t0
-            total_nsa += dt
-            result.shard_results.append(ShardResult(
-                shard=shard, pairs=pairs, ss_kept=ss_kept, idx=idx,
-                totals=np.asarray(totals, np.int64), hist=hist,
-                mom=mom_host, nsa_s=dt))
+        with tuning.tuner_context(autotune, store=store or None):
+            for shard in plan.shards:
+                pairs = tuple(s.scenario for s in shard.specs)
+                dev = devices[shard.device_index % len(devices)]
+                t0 = time.perf_counter()
+                ss_kept, idx, totals, _ = nsa_sweep_device(
+                    originals, pairs, multiple_mode=multiple_mode,
+                    device=dev)
+                # compaction packed every row's kept stamps to the front,
+                # so the metrics dispatch only needs the kept-width column
+                # slice (device slice — kept counts are far below the
+                # padded source width after compression)
+                n_kept = int(-(-max(int(totals.max(initial=1)), 1)
+                               // ops.TILE) * ops.TILE)
+                hist, mom = ops.stream_metrics_batched_device(
+                    ss_kept[:, :min(n_kept, ss_kept.shape[1])], totals,
+                    shard.max_range)
+                mom_host = np.asarray(mom, np.float64)  # O(rows) scalars
+                dt = time.perf_counter() - t0
+                total_nsa += dt
+                result.shard_results.append(ShardResult(
+                    shard=shard, pairs=pairs, ss_kept=ss_kept, idx=idx,
+                    totals=np.asarray(totals, np.int64), hist=hist,
+                    mom=mom_host, nsa_s=dt))
     except ops.PallasDomainError:
         return None   # out-of-domain scenario: host mode, wholesale
 
@@ -626,10 +636,11 @@ def _execute_device(plan, originals, store, backend, multiple_mode
     return result
 
 
-def _execute_host(plan, originals, store, backend, multiple_mode
-                  ) -> DeviceSweepResult:
+def _execute_host(plan, originals, store, backend, multiple_mode,
+                  autotune=None) -> DeviceSweepResult:
     """The host path — the exact pre-plan ``run_many`` composition."""
-    result = DeviceSweepResult(plan, originals, store, backend, "host")
+    result = DeviceSweepResult(plan, originals, store, backend, "host",
+                               autotune=autotune)
     t0 = time.perf_counter()
     for spec in plan.local_missing:
         result.host_sims[spec.scenario] = nsa(
@@ -1072,7 +1083,8 @@ class ChunkedSweepRunner:
     def __init__(self, plan: SweepPlan, originals: Dict[str, Stream],
                  store, *, backend: str = "auto",
                  multiple_mode: str = "time",
-                 checkpoint: Optional[SweepCheckpoint] = None):
+                 checkpoint: Optional[SweepCheckpoint] = None,
+                 autotune: Optional[str] = None):
         if plan.chunk_s <= 0:
             raise ValueError(
                 "plan has no chunk axis — build it with plan_sweep("
@@ -1083,6 +1095,7 @@ class ChunkedSweepRunner:
         self.backend = backend
         self.multiple_mode = multiple_mode
         self.checkpoint = checkpoint
+        self.autotune = autotune
         self.chunk_s = int(plan.chunk_s)
         self._specs = {s.scenario: s for s in plan.scenarios}
         self._shard_states: List[Dict] = []
@@ -1122,7 +1135,8 @@ class ChunkedSweepRunner:
             cn = ChunkedNSA(
                 self.originals,
                 [(s.dataset, s.span_s) for s in shard.specs],
-                multiple_mode=self.multiple_mode, device=dev)
+                multiple_mode=self.multiple_mode, device=dev,
+                autotune=self.autotune)
             self._shard_states.append({
                 "shard": shard,
                 "nsa": cn,
@@ -1145,10 +1159,13 @@ class ChunkedSweepRunner:
         closed before re-raising (the producer side unblocks instead of
         deadlocking).
         """
+        from repro.kernels import tuning
         try:
-            if self.mode == "device":
-                return self._run_device(feeds)
-            return self._run_host(feeds)
+            with tuning.tuner_context(self.autotune,
+                                      store=self.store or None):
+                if self.mode == "device":
+                    return self._run_device(feeds)
+                return self._run_host(feeds)
         except BaseException:
             if feeds:
                 for f in feeds.values():

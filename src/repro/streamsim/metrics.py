@@ -195,8 +195,8 @@ def volatility(stream: Stream, time_range: Optional[int] = None,
 def metrics_batched(streams: Sequence[Stream],
                     time_ranges: Sequence[Optional[int]],
                     *, use_scale_stamps: Optional[Sequence[Optional[bool]]]
-                    = None,
-                    backend: str = "auto") -> List[StreamMetrics]:
+                    = None, backend: str = "auto",
+                    autotune: Optional[str] = None) -> List[StreamMetrics]:
     """Counts + volatility for S streams from ONE batched engine call.
 
     Parameters
@@ -238,10 +238,11 @@ def metrics_batched(streams: Sequence[Stream],
     max_tr = max((tr for _, tr in series), default=0)
     if resolved != "pallas" or max_tr == 0 or not series:
         return [_numpy_metrics(b, tr) for b, tr in series]
-    from repro.kernels import ops
+    from repro.kernels import ops, tuning
     try:
-        hist, mom, _ = ops.stream_metrics_batched(
-            [b for b, _ in series], max_tr)
+        with tuning.tuner_context(autotune):
+            hist, mom, _ = ops.stream_metrics_batched(
+                [b for b, _ in series], max_tr)
     except ops.PallasDomainError:
         return [_numpy_metrics(b, tr) for b, tr in series]
     hist = np.asarray(hist, np.int64)
@@ -408,7 +409,8 @@ def _corr_matrix_numpy(counts: Sequence[np.ndarray], window_s: int,
 def trend_correlation_matrix(counts: Sequence[np.ndarray],
                              window_s: int = 60, *,
                              n_points: Optional[int] = None,
-                             backend: str = "auto") -> np.ndarray:
+                             backend: str = "auto",
+                             autotune: Optional[str] = None) -> np.ndarray:
     """Pearson trend-correlation matrix for ALL S×S count-series pairs.
 
     The batched form of the Fig.-6 fidelity check: every series' sliding-
@@ -451,9 +453,11 @@ def trend_correlation_matrix(counts: Sequence[np.ndarray],
         raise ValueError("window_s must be >= 1")
     counts = [np.asarray(q).reshape(-1) for q in counts]
     if _resolve_backend(backend) == "pallas" and counts:
-        from repro.kernels import ops
+        from repro.kernels import ops, tuning
         try:
-            return ops.trend_correlation_batched(counts, window_s, n_points)
+            with tuning.tuner_context(autotune):
+                return ops.trend_correlation_batched(counts, window_s,
+                                                     n_points)
         except ops.PallasDomainError:
             pass  # totals outside the int32 scan domain -> host path
     return _corr_matrix_numpy(counts, window_s, n_points)

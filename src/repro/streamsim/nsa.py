@@ -81,8 +81,8 @@ def _resolve_backend(backend: str) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend == "auto":
-        from repro.kernels.ops import on_tpu
-        return "pallas" if on_tpu() else "numpy"
+        from repro.kernels.ops import on_accelerator
+        return "pallas" if on_accelerator() else "numpy"
     return backend
 
 
@@ -144,7 +144,8 @@ def systematic_keep_mask(ss: np.ndarray, max_range: int, multiple: float,
 
 
 def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
-        multiple_mode: str = "time", backend: str = "numpy") -> Stream:
+        multiple_mode: str = "time", backend: str = "numpy",
+        autotune: Optional[str] = None) -> Stream:
     """Vectorized NSA (Algorithm 1): normalize + sample -> simulated stream Ds.
 
     Parameters
@@ -165,7 +166,13 @@ def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
     backend : {"numpy", "pallas", "auto"}
         ``"pallas"`` runs normalize → keep-mask → compaction → gather
         device-resident (two fused Pallas dispatches + one XLA scatter);
-        ``"auto"`` picks pallas on TPU, numpy otherwise.
+        ``"auto"`` picks pallas on any real accelerator (TPU or GPU),
+        numpy otherwise.
+    autotune : {"off", "cached", "force"}, optional
+        Tile-tuning mode for the device dispatches
+        (:mod:`repro.kernels.tuning`); ``None``/``"off"`` keeps the
+        bit-for-bit heuristic defaults. Winners here stay in-memory —
+        persistence needs a store (the engine/controller layers').
 
     Returns
     -------
@@ -193,9 +200,11 @@ def nsa(stream: Stream, max_range: int, *, keep: str = "systematic",
     m = _multiple(len(stream), stream.time_range, max_range, multiple_mode)
     if (_resolve_backend(backend) == "pallas" and keep == "systematic"
             and len(stream) > 0):
+        from repro.kernels import tuning
         from repro.kernels.ops import PallasDomainError
         try:
-            return _nsa_pallas(stream, max_range, m)
+            with tuning.tuner_context(autotune):
+                return _nsa_pallas(stream, max_range, m)
         except PallasDomainError:
             pass  # stream outside the kernel's exactness domain
     ss = scale_stamps(stream.t, max_range)
@@ -243,8 +252,8 @@ def _compact_gather(stream: Stream, ss_dev, keep_dev) -> Stream:
 
 
 def nsa_batched(streams: Dict[str, Stream], max_range: int, *,
-                multiple_mode: str = "time",
-                backend: str = "auto") -> Dict[str, Stream]:
+                multiple_mode: str = "time", backend: str = "auto",
+                autotune: Optional[str] = None) -> Dict[str, Stream]:
     """NSA over many concurrent device streams — the IoT-realistic shape.
 
     Parameters
@@ -286,29 +295,31 @@ def nsa_batched(streams: Dict[str, Stream], max_range: int, *,
         return {name: nsa(s, max_range, multiple_mode=multiple_mode,
                           backend="numpy")
                 for name, s in streams.items()}
-    from repro.kernels import ops
+    from repro.kernels import ops, tuning
 
     names = list(streams)
     ts = [streams[n].t for n in names]
     mults = [_multiple(len(streams[n]), streams[n].time_range, max_range,
                        multiple_mode) for n in names]
     try:
-        ss_b, keep_b, lengths = ops.stream_sample_batched(ts, max_range,
-                                                          mults)
+        with tuning.tuner_context(autotune):
+            ss_b, keep_b, lengths = ops.stream_sample_batched(
+                ts, max_range, mults)
+            return {name: _compact_gather(streams[name], ss_b[s],
+                                          keep_b[s, :lengths[s]])
+                    for s, name in enumerate(names)}
     except ops.PallasDomainError:
         # some stream falls outside the kernel's exactness domain
         return {name: nsa(s, max_range, multiple_mode=multiple_mode,
                           backend="numpy")
                 for name, s in streams.items()}
-    return {name: _compact_gather(streams[name], ss_b[s],
-                                  keep_b[s, :lengths[s]])
-            for s, name in enumerate(names)}
 
 
 def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
               pairs: Optional[Sequence[Tuple[str, int]]] = None,
-              multiple_mode: str = "time",
-              backend: str = "auto") -> Dict[Tuple[str, int], Stream]:
+              multiple_mode: str = "time", backend: str = "auto",
+              autotune: Optional[str] = None
+              ) -> Dict[Tuple[str, int], Stream]:
     """NSA over the full (stream × max_range) scenario grid — ONE dispatch.
 
     The Tables 1-3 sweep shape: every ``(name, max_range)`` scenario becomes
@@ -377,7 +388,7 @@ def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
     from repro.kernels import ops
     try:
         ss_kept, idx_b, totals, _ = nsa_sweep_device(
-            streams, pairs, multiple_mode=multiple_mode)
+            streams, pairs, multiple_mode=multiple_mode, autotune=autotune)
     except ops.PallasDomainError:
         # some scenario falls outside the kernel's exactness domain
         return _host()
@@ -386,7 +397,8 @@ def nsa_sweep(streams: Dict[str, Stream], max_ranges: Sequence[int], *,
 
 def nsa_sweep_device(streams: Dict[str, Stream],
                      pairs: Sequence[Tuple[str, int]], *,
-                     multiple_mode: str = "time", device=None):
+                     multiple_mode: str = "time", device=None,
+                     autotune: Optional[str] = None):
     """The device leg of the range-padded sweep — NO host gather.
 
     Runs ONE ``stream_sample`` dispatch plus ONE batched compaction for
@@ -421,14 +433,15 @@ def nsa_sweep_device(streams: Dict[str, Stream],
         callers fall back to the numpy path wholesale.
     """
     import jax.numpy as jnp
-    from repro.kernels import ops
+    from repro.kernels import ops, tuning
 
     ts = [streams[name].t for name, _ in pairs]
     mults = [_multiple(len(streams[name]), streams[name].time_range, mr,
                        multiple_mode) for name, mr in pairs]
-    ss_b, keep_b, lengths = ops.stream_sample_batched(
-        ts, [mr for _, mr in pairs], mults, device=device)
-    idx_b, totals = ops.compact_mask_batched(keep_b)
+    with tuning.tuner_context(autotune):
+        ss_b, keep_b, lengths = ops.stream_sample_batched(
+            ts, [mr for _, mr in pairs], mults, device=device)
+        idx_b, totals = ops.compact_mask_batched(keep_b)
     N = idx_b.shape[1]
     ss_kept = jnp.take_along_axis(ss_b, jnp.clip(idx_b, 0, max(N - 1, 0)),
                                   axis=1)
@@ -522,10 +535,13 @@ class ChunkedNSA:
 
     def __init__(self, streams: Dict[str, Stream],
                  pairs: Sequence[Tuple[str, int]], *,
-                 multiple_mode: str = "time", device=None):
+                 multiple_mode: str = "time", device=None,
+                 autotune: Optional[str] = None):
         import jax
         import jax.numpy as jnp
         from repro.kernels import ops
+
+        self.autotune = autotune
 
         self.pairs = [(name, int(rng)) for name, rng in pairs]
         if not self.pairs:
@@ -583,7 +599,7 @@ class ChunkedNSA:
         :func:`materialize_sweep_chunk` one pipeline step later.
         """
         import jax.numpy as jnp
-        from repro.kernels import ops
+        from repro.kernels import ops, tuning
 
         lo, hi = int(lo), int(hi)
         if not 0 <= lo < hi <= self.width:
@@ -592,20 +608,24 @@ class ChunkedNSA:
         a = self._starts_np[:, lo]
         b = self.lengths if hi >= self.width else self._starts_np[:, hi]
         m = b - a
-        Nc = max(int(-(-max(int(m.max()), 1) // ops.TILE) * ops.TILE),
-                 ops.TILE)
-        a_dev = self._dev(a.astype(np.int32))
-        j = jnp.arange(Nc, dtype=jnp.int32)[None, :]
-        gidx = jnp.clip(a_dev[:, None] + j, 0, self.N - 1)
-        t_slice = jnp.take_along_axis(self._t, gidx, axis=1)
-        # rebase the bucket tables by the slice offset: local rank ==
-        # global rank, so the keep bits match the monolithic launch
-        starts_reb = self._starts - a_dev[:, None]
-        ss, keep = ops.stream_sample_pallas(
-            t_slice, starts_reb, self._counts, self._ktab, self._scal,
-            self.width, interpret=not ops.on_tpu())
-        keep = keep.astype(bool) & (j < self._dev(m.astype(np.int32))[:, None])
-        idx, totals = ops.compact_mask_batched_device(keep)
+        with tuning.tuner_context(self.autotune):
+            cfg = tuning.config_for("stream_sample", s=len(self.pairs),
+                                    n=max(int(m.max()), 1), r=self.width)
+            tile = cfg.record_tile
+            Nc = max(int(-(-max(int(m.max()), 1) // tile) * tile), tile)
+            a_dev = self._dev(a.astype(np.int32))
+            j = jnp.arange(Nc, dtype=jnp.int32)[None, :]
+            gidx = jnp.clip(a_dev[:, None] + j, 0, self.N - 1)
+            t_slice = jnp.take_along_axis(self._t, gidx, axis=1)
+            # rebase the bucket tables by the slice offset: local rank ==
+            # global rank, so the keep bits match the monolithic launch
+            starts_reb = self._starts - a_dev[:, None]
+            ss, keep = ops.stream_sample_pallas(
+                t_slice, starts_reb, self._counts, self._ktab, self._scal,
+                self.width, interpret=not ops.on_accelerator(), config=cfg)
+            keep = keep.astype(bool) & \
+                (j < self._dev(m.astype(np.int32))[:, None])
+            idx, totals = ops.compact_mask_batched_device(keep)
         ss_kept = jnp.take_along_axis(ss, jnp.clip(idx, 0, max(Nc - 1, 0)),
                                       axis=1)
         return ChunkHandles(ss_kept=ss_kept, idx=idx, totals=totals,

@@ -1,0 +1,271 @@
+"""Tile-tuning registry tests: default bit-identity, the measured-sweep
+cache (hit skips the sweep, keyed per device kind, corrupt file falls
+back), concurrent-writer atomicity, and non-default-config equivalence.
+
+Everything runs in Pallas interpret mode on CPU; the measured sweeps here
+tune the interpreter (a valid, self-consistent target — see
+``tuning.device_kind``), so the tests assert cache *mechanics*, never
+which candidate wins.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops, ref, tuning  # noqa: E402
+from repro.kernels.tuning import (  # noqa: E402
+    DEFAULT_CONFIG, TuneKey, KernelTuner, TileConfig)
+from repro.streamsim.store import StreamStore  # noqa: E402
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return StreamStore(tmp_path / "store")
+
+
+def _cache_file(store, kind):
+    return store.root / "_markers" / tuning.TUNE_NAMESPACE / f"{kind}.json"
+
+
+# ------------------------------------------------------------ default path
+def test_default_config_is_the_shipped_constants():
+    assert DEFAULT_CONFIG.record_tile == ops.TILE == 1024
+    assert DEFAULT_CONFIG.bucket_block == ops.BUCKET_BLOCK == 512
+    assert DEFAULT_CONFIG.grid_split == 1
+    assert DEFAULT_CONFIG.sublane == 8
+
+
+@pytest.mark.parametrize("kind", ["cpu-interpret", "tpu-v4", "tpu-v5e"])
+def test_heuristic_reproduces_constants_off_gpu(kind):
+    # autotune="off" on TPU / interpret must be bit-for-bit the pre-tuner
+    # kernels, i.e. the chooser returns exactly the shipped constants
+    for kernel in tuning.KERNELS:
+        key = TuneKey.from_shape(kernel, s=8, n=90000, r=86400)
+        assert tuning.heuristic_config(key, kind) == DEFAULT_CONFIG
+
+
+def test_tune_key_pow2_snaps_and_round_trips():
+    key = TuneKey.from_shape("metrics_fused", s=5, n=90000, r=86400)
+    assert (key.s, key.n, key.r) == (8, 1 << 17, 1 << 17)
+    assert TuneKey.decode(key.encode()) == key
+
+
+def test_off_mode_does_no_io(store):
+    tuner = KernelTuner("off", store=store, kind="cpu-interpret")
+    cfg = tuner.config_for("metrics_fused", s=4, n=4096, r=1024)
+    assert cfg == DEFAULT_CONFIG
+    assert not _cache_file(store, "cpu-interpret").exists()
+
+
+# ----------------------------------------------- non-default config outputs
+def test_non_default_config_outputs_match_default():
+    rng = np.random.default_rng(11)
+    ss = np.sort(rng.integers(0, 3000, (3, 4096)), axis=1).astype(np.int32)
+    wide = TileConfig(record_tile=2048, bucket_block=256)
+    from repro.kernels.metrics_fused import stream_metrics_pallas
+    buckets = 3072   # multiple of both 512 and 256
+    h0, m0 = stream_metrics_pallas(jnp.asarray(ss), buckets, interpret=True)
+    h1, m1 = stream_metrics_pallas(jnp.asarray(ss), buckets, interpret=True,
+                                   config=wide)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    np.testing.assert_allclose(np.asarray(m0), np.asarray(m1),
+                               rtol=1e-5, atol=1e-5)
+
+    from repro.kernels.compact import compact_positions_batched_pallas
+    mask = (rng.random((3, 4096)) < 0.4).astype(np.int32)
+    p0, t0 = compact_positions_batched_pallas(jnp.asarray(mask),
+                                              interpret=True)
+    p1, t1 = compact_positions_batched_pallas(jnp.asarray(mask),
+                                              interpret=True, config=wide)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+    from repro.kernels.trend_scan import trend_scan_pallas
+    q = rng.integers(0, 5, (3, 4096)).astype(np.int32)
+    s0 = trend_scan_pallas(jnp.asarray(q), interpret=True)
+    s1 = trend_scan_pallas(jnp.asarray(q), interpret=True, config=wide)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_grid_split_matches_single_launch():
+    # the batch-axis relief valve must be a pure partition of the rows
+    rng = np.random.default_rng(3)
+    streams = [np.sort(rng.uniform(0, 600.0, 700)) for _ in range(5)]
+
+    class _Tuner(KernelTuner):
+        def config_for(self, kernel, **kw):
+            return TileConfig(grid_split=3)
+
+    ranges = [100, 200, 300, 400, 500]
+    ss0, keep0, len0 = ops.stream_sample_batched(streams, ranges, 1.0)
+    with tuning.use(_Tuner("off")):
+        ss1, keep1, len1 = ops.stream_sample_batched(streams, ranges, 1.0)
+    np.testing.assert_array_equal(np.asarray(ss0), np.asarray(ss1))
+    np.testing.assert_array_equal(np.asarray(keep0), np.asarray(keep1))
+    np.testing.assert_array_equal(np.asarray(len0), np.asarray(len1))
+
+
+# --------------------------------------------------------------- sweep/cache
+def _counting_timer(tuner):
+    calls = [0]
+    real = tuner._timer
+
+    def timer():
+        calls[0] += 1
+        return real()
+
+    tuner._timer = timer
+    return calls
+
+
+def test_force_sweep_persists_and_cached_hit_skips_sweep(store):
+    kind = "cpu-interpret"
+    t1 = KernelTuner("force", store=store, kind=kind, reps=1)
+    c1 = _counting_timer(t1)
+    cfg = t1.config_for("trend_scan", s=2, n=2048)
+    assert c1[0] > 0, "force mode must actually time candidates"
+    assert isinstance(cfg, TileConfig)
+    blob = json.loads(_cache_file(store, kind).read_text())
+    assert blob["version"] == 1 and blob["device_kind"] == kind
+    keystr = TuneKey.from_shape("trend_scan", s=2, n=2048).encode()
+    assert blob["entries"][keystr] == cfg.as_dict()
+
+    # a fresh tuner (fresh process, conceptually) hits the disk cache and
+    # never calls the timer
+    t2 = KernelTuner("cached", store=store, kind=kind, reps=1)
+    c2 = _counting_timer(t2)
+    assert t2.config_for("trend_scan", s=2, n=2048) == cfg
+    assert c2[0] == 0, "cache hit must skip the measured sweep"
+
+
+def test_cache_is_keyed_per_device_kind(store):
+    ka, kb = "tpu-v4", "gpu-a100"
+    ta = KernelTuner("force", store=store, kind=ka, reps=1)
+    ta._sweep = lambda key: TileConfig(record_tile=2048)
+    ta.config_for("compact", s=4, n=4096)
+    assert _cache_file(store, ka).exists()
+    assert not _cache_file(store, kb).exists()
+
+    # the other kind sees nothing cached: its sweep runs
+    tb = KernelTuner("cached", store=store, kind=kb, reps=1)
+    swept = []
+    tb._sweep = lambda key: swept.append(key) or TileConfig()
+    tb.config_for("compact", s=4, n=4096)
+    assert len(swept) == 1
+
+
+def test_corrupt_cache_falls_back_to_heuristic(store):
+    kind = "cpu-interpret"
+    f = _cache_file(store, kind)
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text('{"version": 1, "entries": {"trunca')   # torn write
+    tuner = KernelTuner("cached", store=store, kind=kind, reps=1)
+    assert tuner._load_cache() == {}
+    tuner._sweep = lambda key: tuning.heuristic_config(key, kind)
+    cfg = tuner.config_for("metrics_fused", s=2, n=2048, r=512)
+    assert cfg == DEFAULT_CONFIG   # no raise, heuristic fallback
+
+    # entries with a bogus payload are skipped entry-wise, not wholesale
+    f.write_text(json.dumps({
+        "version": 1, "device_kind": kind,
+        "entries": {"trend_scan/s2/n2048/r0/int32":
+                    {"record_tile": 2048, "bucket_block": 512,
+                     "grid_split": 1},
+                    "not-a-key": {"record_tile": "wat"}}}))
+    cache = tuner._load_cache()
+    assert cache == {TuneKey.from_shape("trend_scan", s=2, n=2048):
+                     TileConfig(record_tile=2048)}
+
+
+def test_concurrent_force_writers_leave_valid_json(store):
+    kind = "cpu-interpret"
+    keys = [("trend_scan", 2, 2048), ("compact", 4, 4096)]
+    cfgs = {0: TileConfig(record_tile=2048), 1: TileConfig(bucket_block=256)}
+    errs = []
+
+    def write(i):
+        try:
+            t = KernelTuner("force", store=store, kind=kind, reps=1)
+            t._sweep = lambda key: cfgs[i]
+            kernel, s, n = keys[i]
+            for _ in range(20):      # hammer the read-merge-write path
+                t._mem.clear()
+                t.config_for(kernel, s=s, n=n)
+        except Exception as e:       # pragma: no cover - failure detail
+            errs.append(e)
+
+    threads = [threading.Thread(target=write, args=(i,)) for i in (0, 1)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    blob = json.loads(_cache_file(store, kind).read_text())   # valid JSON
+    entries = blob["entries"]
+    for i, (kernel, s, n) in enumerate(keys):
+        assert entries[TuneKey.from_shape(kernel, s=s, n=n).encode()] == \
+            cfgs[i].as_dict()
+
+
+def test_sweep_failure_degrades_to_heuristic(store):
+    tuner = KernelTuner("force", store=store, kind="cpu-interpret", reps=1)
+
+    def boom():
+        raise RuntimeError("device fell over")
+
+    tuner._timer = boom
+    cfg = tuner.config_for("trend_scan", s=2, n=2048)
+    assert cfg == tuning.heuristic_config(
+        TuneKey.from_shape("trend_scan", s=2, n=2048), "cpu-interpret")
+
+
+# ------------------------------------------------------------- ambient knob
+def test_tuner_context_off_installs_nothing(store):
+    with tuning.tuner_context(None, store=store):
+        assert tuning.current() is tuning._DEFAULT_TUNER
+    with tuning.tuner_context("off", store=store):
+        assert tuning.current() is tuning._DEFAULT_TUNER
+    with pytest.raises(ValueError):
+        with tuning.tuner_context("fastest", store=store):
+            pass  # pragma: no cover
+
+
+def test_shared_tuner_registry_reuses_instances(store):
+    a = tuning.shared_tuner("cached", store=store, kind="tpu-v4")
+    b = tuning.shared_tuner("cached", store=store, kind="tpu-v4")
+    c = tuning.shared_tuner("cached", store=store, kind="tpu-v5e")
+    assert a is b and a is not c
+
+
+def test_nsa_autotune_off_is_bit_identical():
+    from repro.streamsim import make_stream, nsa, preprocess
+    st = preprocess(make_stream("traffic", scale=0.01, seed=2))
+    base = nsa(st, 600, backend="pallas")
+    tuned_off = nsa(st, 600, backend="pallas", autotune="off")
+    np.testing.assert_array_equal(base.t, tuned_off.t)
+
+
+def test_controller_run_accepts_autotune(tmp_path):
+    from repro.streamsim.controller import Controller
+
+    def consumer(q):
+        n = 0
+        while True:
+            item = q.get()
+            if item is None:
+                break
+            n += 1
+        return {"consumed": n}
+
+    ctl = Controller(store_dir=tmp_path / "s1")
+    r0 = ctl.run("traffic", 600, consumer, scale=0.01, seed=3)
+    ctl2 = Controller(store_dir=tmp_path / "s2")
+    r1 = ctl2.run("traffic", 600, consumer, scale=0.01, seed=3,
+                  autotune="cached")
+    assert r0.simulated_rows == r1.simulated_rows
+    assert r0.consumer_metrics == r1.consumer_metrics
